@@ -1,0 +1,47 @@
+"""Paper Table 4: component ablation (SC, +MLPS, +BC) on mixed-v1.
+
+Reports optimal-load QPS gain (goodput frontier) and high-load violation
+improvement, mirroring the table's two columns.
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK, emit, run_sim
+from repro.serving.metrics import max_goodput
+
+VARIANTS = [
+    ("sarathi-edf", "sarathi-edf", {}),
+    ("slidingserve-sc", "slidingserve",
+     {"enable_mlps": False, "enable_bc": False}),
+    ("slidingserve-sc-mlps", "slidingserve", {"enable_bc": False}),
+    ("slidingserve-sc-mlps-bc", "slidingserve", {}),
+]
+
+
+def main(quick: bool = QUICK) -> dict:
+    duration = 60.0 if quick else 150.0
+    high_qps = 4.5
+    results = {}
+    prev_qps = None
+    for label, sched, kw in VARIANTS:
+        def at(qps, _s=sched, _k=kw):
+            _, summ = run_sim(_s, "qwen2.5-7b", "mixed-v1", qps, duration,
+                              sched_kwargs=_k)
+            return summ
+        out = max_goodput(at, 0.125, 8.0, violation_cap=0.01,
+                          iters=5 if quick else 7)
+        _, s_high = run_sim(sched, "qwen2.5-7b", "mixed-v1", high_qps, duration,
+                            sched_kwargs=kw)
+        results[label] = {"optimal_qps": out["qps"],
+                          "high_load_viol": s_high["violation_rate"]}
+        gain = ""
+        if prev_qps:
+            gain = f"gain={100 * (out['qps'] / max(prev_qps, 1e-9) - 1):.1f}%"
+        emit(f"ablation/{label}/optimal_qps", f"{out['qps']:.3f}", gain)
+        emit(f"ablation/{label}/high_load_viol", f"{s_high['violation_rate']:.4f}",
+             f"qps={high_qps}")
+        prev_qps = out["qps"]
+    return results
+
+
+if __name__ == "__main__":
+    main()

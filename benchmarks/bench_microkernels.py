@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing + model-layer
+throughput of the jnp paths on CPU (the TPU perf path is the Pallas kernel;
+this prints ref-vs-kernel agreement and per-call walltime for the record)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # chunked prefill attention: jnp blockwise path (the serving hot loop)
+    from repro.models.attention import blockwise_attention
+    B, S, Hkv, G, D = 1, 1024, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, Hkv, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    f = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, scale=0.125,
+                                                    block_q=256, block_k=256))
+    us = _time(f, q, k, v)
+    flops = 4 * S * S / 2 * Hkv * G * D * B
+    emit("kernel/blockwise_attention_1k/us_per_call", f"{us:.0f}",
+         f"{flops / us / 1e3:.1f} GFLOP/s cpu")
+
+    # paged attention interpret-mode (correctness-path timing)
+    from repro.kernels.paged_attention.kernel import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    qd = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(4, 32, 16, 64)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, 32, (4, 8)), jnp.int32)
+    ln = jnp.asarray([128, 96, 64, 17], jnp.int32)
+    out_k = paged_attention(qd, kp, kp, bt, ln, scale=0.125, interpret=True)
+    out_r = paged_attention_ref(qd, kp, kp, bt, ln, scale=0.125)
+    emit("kernel/paged_attention/max_err", f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}",
+         "interpret vs ref")
+
+    from repro.kernels.mamba_scan.kernel import mamba_scan
+    from repro.kernels.mamba_scan.ref import mamba_scan_ref
+    x = jnp.asarray(rng.normal(size=(2, 128, 64)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(2, 128, 64))) * 0.1, jnp.float32)
+    Bc = jnp.asarray(rng.normal(size=(2, 128, 8)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(64, 8)), jnp.float32))
+    Dp = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    out_k = mamba_scan(x, dt, Bc, Bc, A, Dp, chunk=32, d_tile=32, interpret=True)
+    out_r = mamba_scan_ref(x, dt, Bc, Bc, A, Dp)
+    emit("kernel/mamba_scan/max_err", f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}",
+         "interpret vs ref")
+
+    from repro.kernels.mlstm_chunkwise.kernel import mlstm_chunkwise
+    from repro.kernels.mlstm_chunkwise.ref import mlstm_ref
+    qm = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    km = qm / np.sqrt(32)
+    li = jnp.asarray(rng.normal(size=(1, 2, 128)), jnp.float32)
+    lf = jax.nn.log_sigmoid(jnp.asarray(rng.normal(size=(1, 2, 128)) + 3, jnp.float32))
+    out_k = mlstm_chunkwise(qm, km, qm, li, lf, chunk=64, interpret=True)
+    out_r = mlstm_ref(qm, km, qm, li, lf)
+    emit("kernel/mlstm_chunkwise/max_err", f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}",
+         "interpret vs ref")
+
+
+if __name__ == "__main__":
+    main()

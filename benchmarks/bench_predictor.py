@@ -1,0 +1,69 @@
+"""Paper Table 5: Batch Latency Predictor fidelity (MAE / RMSE / R^2).
+
+The paper evaluates on three GPU configs; we evaluate against the analytic
+ground-truth executor for three TPU v5e model-parallel configurations.
+Training follows the paper's protocol: offline init on profiled batches, then
+online incremental updates from a real serving trace; evaluation is on a
+held-out trace slice.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.configs.bench_models import BENCH_MODELS
+from repro.core.predictor import BatchLatencyPredictor
+from repro.core import SlidingServeScheduler
+from repro.serving.costmodel import CostModel, HardwareSpec, ModelProfile
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workloads import WorkloadSpec, make_workload
+
+CONFIGS = [("v5e-tp1", 1), ("v5e-tp4", 4), ("v5e-tp8", 8)]
+
+
+def trace_samples(chips: int, duration: float, qps_scale: float, seed: int = 9):
+    """Harvest (batch, noisy latency, clean latency) from a live simulation."""
+    cfg = BENCH_MODELS["qwen2.5-7b"]
+    prof = ModelProfile.from_config(cfg)
+    cm = CostModel(prof, HardwareSpec(chips=chips), seed=seed)
+    wl = make_workload(WorkloadSpec("mixed-v1", 2.5 * qps_scale, duration, seed=seed), cm)
+    sched = SlidingServeScheduler(max_budget=4096)
+    samples = []
+    orig = sched.observe
+    def spy(batch, latency):
+        samples.append((list(batch), latency, cm.latency(batch, noisy=False)))
+        orig(batch, latency)
+    sched.observe = spy
+    ServingSimulator(sched, cm, wl, kv_capacity_tokens=512 * 1024).run()
+    return samples
+
+
+def main(quick: bool = QUICK) -> dict:
+    duration = 60.0 if quick else 180.0
+    results = {}
+    for name, chips in CONFIGS:
+        samples = trace_samples(chips, duration, qps_scale=max(1.0, chips * 0.75))
+        if len(samples) < 200:
+            samples = trace_samples(chips, duration * 2, qps_scale=max(1.0, chips))
+        split = int(0.7 * len(samples))
+        train, test = samples[:split], samples[split:]
+        p = BatchLatencyPredictor()
+        p.fit_offline([(b, y) for b, y, _ in train[: len(train) // 2]])
+        for batch, y, _ in train[len(train) // 2:]:
+            p.observe(batch, y)      # online incremental phase
+        ev = p.evaluate([(b, y) for b, y, _ in test])
+        # fidelity vs the *mean* latency: strips the irreducible runtime
+        # jitter (the paper's GPUs traces have far larger between-batch
+        # variance, so their R^2 vs raw runtimes is not noise-limited)
+        ev_clean = p.evaluate([(b, yc) for b, _, yc in test])
+        results[name] = {**ev, "r2_clean": ev_clean["r2"]}
+        emit(f"predictor/{name}/mae_ms", f"{ev['mae'] * 1e3:.3f}", "paper: 2.5-2.7ms")
+        emit(f"predictor/{name}/rmse_ms", f"{ev['rmse'] * 1e3:.3f}", "paper: 4.1-4.3ms")
+        emit(f"predictor/{name}/r2", f"{ev['r2']:.4f}", "vs noisy runtimes")
+        emit(f"predictor/{name}/r2_clean", f"{ev_clean['r2']:.4f}", "paper: >0.99")
+        emit(f"predictor/{name}/n_test", ev["n"], "")
+    return results
+
+
+if __name__ == "__main__":
+    main()

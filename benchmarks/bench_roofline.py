@@ -1,0 +1,91 @@
+"""Roofline table from the extrapolated probe measurements.
+
+Reads the probe JSONL produced by the dry-run roofline pass (two-point layer
+extrapolation, see `repro/analysis/extrapolate.py`), computes the three
+roofline terms per (arch x shape) on the single-pod mesh, and emits both CSV
+rows and the EXPERIMENTS.md markdown table.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops_estimate
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+N_DEV = 256
+PROBES = os.environ.get("PROBES_JSONL", "results/probes.jsonl")
+
+
+def load_rows(path: str = PROBES):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        d = json.loads(line)
+        if "error" in d:
+            continue
+        rows.append(d)
+    return rows
+
+
+def term_row(d: dict) -> dict:
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    t_comp = d["flops"] / PEAK_FLOPS
+    t_mem = d["bytes"] / HBM_BW
+    t_coll = d["coll"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_estimate(cfg, shape)
+    useful = mf / (d["flops"] * N_DEV) if d["flops"] else 0.0
+    ideal = mf / (N_DEV * PEAK_FLOPS)
+    frac = ideal / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    frac_comp = ideal / t_comp if t_comp > 0 else 0.0
+    return dict(d, t_comp=t_comp, t_mem=t_mem, t_coll=t_coll,
+                bottleneck=bottleneck, model_flops=mf, useful=useful,
+                peak_fraction=frac, compute_bound_fraction=frac_comp)
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | t_comp ms | t_mem* ms | t_coll ms | bottleneck | "
+           "useful 6ND/HLO | roofline frac | compute-bound frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    order = {a: i for i, a in enumerate(
+        ["xlstm-125m", "jamba-1.5-large-398b", "llama3.2-3b", "gemma2-27b",
+         "qwen3-1.7b", "gemma2-2b", "internvl2-26b", "qwen2-moe-a2.7b",
+         "deepseek-v3-671b", "seamless-m4t-large-v2"])}
+    shp = {s: i for i, s in enumerate(["train_4k", "prefill_32k", "decode_32k",
+                                       "long_500k"])}
+    lines = []
+    for r in sorted(rows, key=lambda r: (order.get(r["arch"], 99),
+                                         shp.get(r["shape"], 9))):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp'] * 1e3:.2f} | "
+            f"{r['t_mem'] * 1e3:.2f} | {r['t_coll'] * 1e3:.3f} | "
+            f"{r['bottleneck']} | {r['useful']:.2f} | "
+            f"{r['peak_fraction']:.3f} | {r['compute_bound_fraction']:.3f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    rows = [term_row(d) for d in load_rows()]
+    if not rows:
+        emit("roofline/status", "no probe data",
+             f"run the dry-run roofline pass first ({PROBES})")
+        return
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}/bottleneck", r["bottleneck"],
+             f"frac={r['peak_fraction']:.3f}")
+    md = markdown_table(rows)
+    out = os.environ.get("ROOFLINE_MD_OUT")
+    if out:
+        with open(out, "w") as f:
+            f.write(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: scheduler registry, simulation runner, CSV."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Optional
+
+from repro.configs.bench_models import BENCH_MODELS
+from repro.core import (
+    FCFSStaticScheduler, QoServeLikeScheduler, SarathiEDFScheduler,
+    SingleStepGreedyScheduler, SlidingServeScheduler,
+)
+from repro.serving.costmodel import CostModel, HardwareSpec, ModelProfile
+from repro.serving.metrics import summarize
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workloads import WorkloadSpec, make_workload
+
+SCHEDULERS = {
+    "sarathi-edf": SarathiEDFScheduler,
+    "single-step": SingleStepGreedyScheduler,
+    "qoserve": QoServeLikeScheduler,
+    "slidingserve": SlidingServeScheduler,
+}
+
+QUICK = os.environ.get("BENCH_FULL", "0") != "1"
+
+
+def hw_for(model_name: str, chips: int = 1) -> HardwareSpec:
+    return HardwareSpec(chips=chips)
+
+
+def run_sim(sched_name: str, model_name: str, dataset: str, qps: float,
+            duration: float, seed: int = 3, kv_tokens: int = 512 * 1024,
+            sched_kwargs: Optional[Dict] = None, collect_trace: bool = False):
+    cfg = BENCH_MODELS[model_name]
+    prof = ModelProfile.from_config(cfg)
+    cm = CostModel(prof, hw_for(model_name), seed=7)
+    wl = make_workload(WorkloadSpec(dataset, qps, duration, seed=seed), cm)
+    sched = SCHEDULERS[sched_name](max_budget=4096, **(sched_kwargs or {}))
+    sim = ServingSimulator(sched, cm, wl, kv_capacity_tokens=kv_tokens,
+                           collect_trace=collect_trace)
+    res = sim.run()
+    return res, summarize(res.requests, res.duration)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}")

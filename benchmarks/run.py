@@ -1,0 +1,50 @@
+"""Benchmark orchestrator: one bench per paper table/figure + roofline.
+
+CSV rows ``name,value,derived`` on stdout. Default is a quick pass; set
+``BENCH_FULL=1`` for the full sweep used in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_goodput, bench_overload,
+                            bench_predictor, bench_transient)
+    benches = [
+        ("goodput (Fig. 4)", bench_goodput.main),
+        ("overload (Fig. 5)", bench_overload.main),
+        ("transient (Fig. 6)", bench_transient.main),
+        ("ablation (Table 4)", bench_ablation.main),
+        ("predictor (Table 5)", bench_predictor.main),
+    ]
+    failures = 0
+    for name, fn in benches:
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    for name, modname in [("kernel microbenches", "bench_microkernels"),
+                          ("roofline table", "bench_roofline")]:
+        try:
+            import importlib
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            print(f"# --- {name} ---", flush=True)
+            mod.main()
+        except ImportError:
+            pass
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: the paper's scheduler in 60 seconds.
+
+Builds a SlidingServe scheduler, synthesizes a ShareGPT-like workload
+(paper Table 2), runs the event-driven simulator against the TPU-v5e cost
+model, and prints SLO metrics vs the Sarathi-EDF baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.bench_models import QWEN25_7B
+from repro.core import SarathiEDFScheduler, SlidingServeScheduler
+from repro.serving.costmodel import CostModel, HardwareSpec, ModelProfile
+from repro.serving.metrics import summarize
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workloads import WorkloadSpec, make_workload
+
+
+def main():
+    profile = ModelProfile.from_config(QWEN25_7B)
+    hw = HardwareSpec(chips=1)
+
+    for sched_cls in (SarathiEDFScheduler, SlidingServeScheduler):
+        cost = CostModel(profile, hw, seed=7)
+        workload = make_workload(
+            WorkloadSpec(dataset="sharegpt", qps=6.0, duration=60.0, seed=1), cost)
+        sched = sched_cls(max_budget=4096)
+        sim = ServingSimulator(sched, cost, workload,
+                               kv_capacity_tokens=512 * 1024)
+        result = sim.run()
+        s = summarize(result.requests, result.duration)
+        print(f"{sched.name:>14}: {s['n_requests']} requests | "
+              f"violations {s['violation_rate']:.1%} | "
+              f"TTFT p50 {s['ttft_p50'] * 1e3:.0f}ms p99 {s['ttft_p99'] * 1e3:.0f}ms | "
+              f"goodput {s['goodput_rps']:.2f} req/s")
+
+
+if __name__ == "__main__":
+    main()

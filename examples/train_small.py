@@ -1,0 +1,80 @@
+"""Train a ~100M-param llama-style model for a few hundred steps on CPU,
+with checkpoint/restart fault tolerance and (optional) int8 gradient
+compression — the training-substrate end-to-end driver.
+
+    PYTHONPATH=src python examples/train_small.py --steps 200
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import RunCtx, init_params
+from repro.runtime.fault_tolerance import TrainingSupervisor
+from repro.train.data import DataConfig, PackedSyntheticData
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a failure at this step (tests restart)")
+    args = ap.parse_args()
+
+    # ~100M params: a scaled-down llama3.2 family member
+    cfg = dataclasses.replace(
+        get_config("llama3.2-3b"),
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32000, dtype=jnp.float32, param_dtype=jnp.float32)
+    rctx = RunCtx(block_q=64, block_k=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n / 1e6:.1f}M params")
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps),
+        compress_grads=args.compress_grads)
+    step_fn = jax.jit(make_train_step(cfg, rctx, tcfg), donate_argnums=(0, 1))
+    data = PackedSyntheticData(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
+
+    state = {"params": params, "train": init_train_state(cfg, params, tcfg)}
+
+    def one_step(st, i):
+        batch = {"tokens": jnp.asarray(data.batch(i))}
+        p, t, m = step_fn(st["params"], st["train"], batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f}",
+                  flush=True)
+        return {"params": p, "train": t}
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        sup = TrainingSupervisor(ckpt_dir, save_every=50)
+        fired = {"done": False}
+
+        def fail_at(step):
+            if args.fail_at and step == args.fail_at and not fired["done"]:
+                fired["done"] = True
+                print(f"!! injecting failure at step {step}; restoring from "
+                      f"checkpoint", flush=True)
+                return True
+            return False
+
+        t0 = time.time()
+        state, end, restarts = sup.run(one_step, state, 0, args.steps,
+                                       fail_at=fail_at)
+        print(f"done: {end} steps, {restarts} restart(s), "
+              f"{time.time() - t0:.0f}s wall")
+
+
+if __name__ == "__main__":
+    main()

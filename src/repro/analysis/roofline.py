@@ -1,0 +1,243 @@
+"""Roofline terms from compiled dry-run artifacts (no real hardware).
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports *per-device* flops/bytes, so the chip
+division is already folded in. collective_bytes is parsed from the compiled
+HLO text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute result shape, with while-loop bodies multiplied by their
+trip count (XLA's static analysis counts a loop body once; trip counts are
+recovered from the loop-condition comparison constants).
+
+For exact flops/bytes the roofline pass lowers the cell with layer scans
+*unrolled* (RunCtx.unroll_layers) — the dry-run pass/fail still uses the
+scanned program. Residual undercount: the Mamba/sLSTM time-step scans
+(O(S*d*n) VPU work, < 0.5% of their layers' FLOPs) — accounted analytically
+in MODEL_FLOPS, noted per cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e constants (per chip).
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of 'f32[512,1024]{1,0}' or a (tuple, of, shapes)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its lines (flat HLO text parser)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{$", stripped)
+        if m is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\{$", stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Recover the loop bound from the condition's comparison constant."""
+    consts = []
+    for ln in cond_lines:
+        if "compare(" in ln or "constant(" in ln:
+            consts += [int(c) for c in re.findall(r"constant\((\d+)\)", ln)]
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float
+    by_kind: Dict[str, float]
+    num_ops: int
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    def comp_bytes(lines: List[str]) -> Tuple[float, Dict[str, float], int]:
+        total, by_kind, n = 0.0, {}, 0
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"= [^=]*\b{kind}(-start|-done)?\(", ln):
+                    if f"{kind}-done" in ln:
+                        continue  # counted at -start
+                    shape = ln.split("=", 1)[1].split(kind)[0]
+                    b = _shape_bytes(shape)
+                    total += b
+                    by_kind[kind] = by_kind.get(kind, 0.0) + b
+                    n += 1
+                    break
+        return total, by_kind, n
+
+    # find while loops anywhere: body/condition computation names + trip count
+    body_mult: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln or "= while(" in ln or re.search(r"\bwhile\(", ln):
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    tc = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                    body_mult[mb.group(1)] = max(body_mult.get(mb.group(1), 1), tc)
+
+    total, by_kind, num = 0.0, {}, 0
+    for name, lines in comps.items():
+        t, bk, n = comp_bytes(lines)
+        mult = body_mult.get(name, 1)
+        total += t * mult
+        num += n
+        for k, v in bk.items():
+            by_kind[k] = by_kind.get(k, 0.0) + v * mult
+    return CollectiveStats(total_bytes=total, by_kind=by_kind, num_ops=num)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float            # 6*N*D (or 6*N_active*D) global
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs * devices)
+    peak_fraction: float          # model-flops utilization at the bound
+    memory_per_device_gb: float
+    notes: str = ""
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},"
+                f"{self.flops_per_device:.3e},{self.bytes_per_device:.3e},"
+                f"{self.collective_bytes_per_device:.3e},"
+                f"{self.t_compute * 1e3:.3f},{self.t_memory * 1e3:.3f},"
+                f"{self.t_collective * 1e3:.3f},{self.bottleneck},"
+                f"{self.useful_ratio:.3f},{self.peak_fraction:.3f},"
+                f"{self.memory_per_device_gb:.2f}")
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, *,
+            cost: dict, hlo_text: str, num_devices: int,
+            model_flops: float, memory_bytes_per_device: float,
+            notes: str = "") -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    # HLO text is the per-device SPMD program -> already per device
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll.total_bytes / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo_flops = flops * num_devices
+    useful = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    t_bound = max(terms.values())
+    ideal = model_flops / (num_devices * PEAK_FLOPS)
+    peak_fraction = ideal / t_bound if t_bound > 0 else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=coll.total_bytes,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, peak_fraction=peak_fraction,
+        memory_per_device_gb=memory_bytes_per_device / 1e9, notes=notes)
+
+
+def analytic_memory_bytes(cell_inputs, cfg, shape, n_dp: int,
+                          accum: int = 1) -> dict:
+    """Exact per-device bytes for all inputs (params/opt/cache, from their
+    shard shapes) + an activation/workspace estimate.
+
+    Needed because the CPU XLA pipeline does not run the TPU
+    HloRematerialization/scheduling passes that enforce HBM limits — its temp
+    arena hoists loop-invariant converts across whole saved-activation stacks
+    and so structurally overestimates a TPU's peak (observed 2-4x). The
+    analytic activation model is the standard accounting: saved layer inputs
+    (remat-full) for one microbatch + a working set of ~6 layer tensors.
+    """
+    import numpy as np
+    import jax
+
+    args = 0
+    for leaf in jax.tree.leaves(cell_inputs):
+        if hasattr(leaf, "sharding") and leaf.sharding is not None:
+            shp = leaf.sharding.shard_shape(leaf.shape)
+        else:
+            shp = leaf.shape
+        args += int(np.prod(shp)) * leaf.dtype.itemsize if shp else leaf.dtype.itemsize
+
+    d = cfg.d_model
+    layers = cfg.num_layers + (cfg.num_encoder_layers if cfg.enc_dec else 0)
+    b_loc = max(shape.global_batch // n_dp, 1)
+    if shape.kind == "train":
+        b_micro = max(b_loc // accum, 1)
+        saved = layers * b_micro * shape.seq_len * d * 2          # bf16 carries
+        work = 8 * b_micro * shape.seq_len * d * 4                # bwd tensors
+        ce = 2 * b_micro * (shape.seq_len // 16) * cfg.vocab_size * 4
+        act = saved + work + ce
+    elif shape.kind == "prefill":
+        act = 6 * b_loc * shape.seq_len * d * 4
+    else:
+        act = 6 * b_loc * 1 * d * 4 + 2 * b_loc * cfg.vocab_size * 4
+    return {"args_bytes": args, "activation_bytes": act,
+            "total_bytes": args + act}
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D forward-only; MoE uses active
+    params. D = tokens processed by the step."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens

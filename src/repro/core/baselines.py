@@ -1,0 +1,96 @@
+"""Baseline schedulers the paper evaluates against (§5 Baselines).
+
+* ``FCFSStaticScheduler`` — vLLM-style: static token budget, FCFS order.
+* ``SarathiEDFScheduler`` — Sarathi chunked prefill with a static per-round
+  token budget; candidates ordered earliest-TTFT-deadline-first.
+* ``SingleStepGreedyScheduler`` — the §2.2 strawman: dynamic chunking that
+  greedily maximizes the *current* iteration's budget under the tightest
+  decode TBT slack (no look-ahead).
+* ``QoServeLikeScheduler`` — a QoServe-style SOTA stand-in: single-step
+  dynamic chunking + hybrid prioritization (deadline urgency blended with
+  estimated remaining processing time) + proactive relegation of requests
+  whose SLO already expired.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.scheduler import Decision, SchedulerBase
+from repro.core.sliding_chunker import window_bounds
+from repro.serving.request import Request
+
+
+class FCFSStaticScheduler(SchedulerBase):
+    name = "vllm-fcfs"
+
+    def __init__(self, predictor=None, max_budget: int = 4096, chunk_budget: int = 512):
+        super().__init__(predictor, max_budget)
+        self.chunk_budget = chunk_budget
+
+    def schedule(self, t, waiting, prefilling, decoding):
+        P = sorted(list(prefilling) + list(waiting), key=lambda r: r.arrival)
+        pred, alloc = self.F.forward(list(decoding), P, self.chunk_budget)
+        if not alloc:
+            return None
+        return Decision(alloc, pred, self.chunk_budget, self.name)
+
+
+class SarathiEDFScheduler(SchedulerBase):
+    name = "sarathi-edf"
+
+    def __init__(self, predictor=None, max_budget: int = 4096, chunk_budget: int = 512):
+        super().__init__(predictor, max_budget)
+        self.chunk_budget = chunk_budget
+
+    def schedule(self, t, waiting, prefilling, decoding):
+        P = sorted(list(prefilling) + list(waiting), key=lambda r: r.ttft_deadline())
+        pred, alloc = self.F.forward(list(decoding), P, self.chunk_budget)
+        if not alloc:
+            return None
+        return Decision(alloc, pred, self.chunk_budget, self.name)
+
+
+class SingleStepGreedyScheduler(SchedulerBase):
+    name = "single-step"
+
+    def schedule(self, t, waiting, prefilling, decoding):
+        P = sorted(list(prefilling) + list(waiting), key=lambda r: r.ttft_deadline())
+        D = list(decoding)
+        t_cur, _ = window_bounds(D, t, default_cur=self.max_iter_time)
+        t_cur = min(t_cur, self.max_iter_time)
+        budget = self.F.time_to_budget(D, P, t_cur)
+        pred, alloc = self.F.forward(D, P, budget)
+        if not alloc:
+            return None
+        return Decision(alloc, pred, budget, self.name)
+
+
+class QoServeLikeScheduler(SchedulerBase):
+    name = "qoserve"
+
+    def __init__(self, predictor=None, max_budget: int = 4096, urgency_weight: float = 1.0,
+                 max_iter_time: float = 0.05):
+        super().__init__(predictor, max_budget, max_iter_time=max_iter_time)
+        self.urgency_weight = urgency_weight
+
+    def _key(self, r: Request, t: float):
+        expired = 1 if r.ttft_slack(t) < 0 else 0
+        est_time = r.remaining_prefill() / max(self.rho, 1.0)
+        # hybrid: deadline urgency blended with estimated processing time
+        score = r.ttft_slack(t) - self.urgency_weight * est_time
+        return (expired, score, r.remaining_prefill())
+
+    def schedule(self, t, waiting, prefilling, decoding):
+        P = sorted(list(prefilling) + list(waiting), key=lambda r: self._key(r, t))
+        D = list(decoding)
+        t_cur, _ = window_bounds(D, t, default_cur=self.max_iter_time)
+        t_cur = min(t_cur, self.max_iter_time)
+        budget = self.F.time_to_budget(D, P, t_cur)
+        pred, alloc = self.F.forward(D, P, budget)
+        if not alloc:
+            return None
+        return Decision(alloc, pred, budget, self.name)
+
+
+ALL_BASELINES = (FCFSStaticScheduler, SarathiEDFScheduler,
+                 SingleStepGreedyScheduler, QoServeLikeScheduler)

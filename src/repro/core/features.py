@@ -1,0 +1,48 @@
+"""Batch feature construction (paper §3.2, Table 1).
+
+A batch is ``[(c_i, u_i)]``: tokens scheduled this round and tokens already
+cached, per request. Requests split into decode (c_i <= 1) and prefill
+(c_i > 1) sets (Eq. 2); the scene label (Eq. 3) selects the expert model.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+SCENES = ("pure_decode", "pure_prefill", "mixed")
+NUM_FEATURES = 7
+
+
+def split_sets(batch: Sequence[Tuple[int, int]]):
+    """Eq. 2: D = {i | c_i <= 1}, P = {i | c_i > 1}."""
+    D = [(c, u) for c, u in batch if c <= 1]
+    P = [(c, u) for c, u in batch if c > 1]
+    return D, P
+
+
+def scene_of(batch: Sequence[Tuple[int, int]]) -> str:
+    """Eq. 3."""
+    D, P = split_sets(batch)
+    if not P:
+        return "pure_decode"
+    if not D:
+        return "pure_prefill"
+    return "mixed"
+
+
+def batch_features(batch: Sequence[Tuple[int, int]]) -> np.ndarray:
+    """Table 1's 7-dim feature vector x."""
+    D, P = split_sets(batch)
+    x1 = float(sum(c * (u + c) for c, u in P))   # prefill attention complexity
+    x2 = float(sum(c * c for c, u in P))          # chunk self-attention
+    x3 = float(sum(u for _, u in batch))          # total cached tokens
+    x4 = float(len(D))                            # decode request count
+    x5 = float(sum(u for _, u in D))              # decode cumulative context
+    x6 = float(sum(c for c, _ in P))              # total prefill tokens
+    x7 = float(max((c for c, _ in P), default=0))  # max single prefill chunk
+    return np.array([x1, x2, x3, x4, x5, x6, x7], dtype=np.float64)
+
+
+def featurize(batch: Sequence[Tuple[int, int]]) -> Tuple[np.ndarray, str]:
+    return batch_features(batch), scene_of(batch)

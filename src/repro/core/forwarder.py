@@ -1,0 +1,128 @@
+"""BatchForwarder F (paper Alg. 1/2): Forward / Pred / TimeToBudget.
+
+``Forward(D, P, b)`` materializes the batch a budget of ``b`` tokens buys
+under vLLM's allocation rule — every decode request gets 1 token, then
+prefill/waiting requests take ``min(remaining, budget_left)`` in priority
+order — and predicts its execution time. ``TimeToBudget`` inverts the
+predictor by binary search (the paper's stated implementation).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.serving.request import Request
+
+Alloc = List[Tuple[Request, int]]
+
+
+class BatchForwarder:
+    def __init__(self, predictor, max_budget: int, budget_quantum: int = 1):
+        self.predictor = predictor
+        self.max_budget = max_budget
+        self.quantum = budget_quantum  # beyond-paper: bucket budgets for JIT warmth
+
+    # ---- batch materialization ------------------------------------------------
+    def allocate(self, decoding: Sequence[Request], prefill_sorted: Sequence[Request],
+                 budget: int) -> Alloc:
+        alloc: Alloc = [(r, 1) for r in decoding]
+        left = budget - len(decoding)
+        for r in prefill_sorted:
+            if left <= 0:
+                break
+            take = min(r.remaining_prefill(), left)
+            if take > 0:
+                alloc.append((r, take))
+                left -= take
+        return alloc
+
+    @staticmethod
+    def to_batch(alloc: Alloc) -> List[Tuple[int, int]]:
+        """(c_i, u_i) pairs for the predictor/features."""
+        return [(n, r.context_len()) for r, n in alloc]
+
+    # ---- F.Forward / F.Pred / F.TimeToBudget -----------------------------------
+    def forward(self, decoding, prefill_sorted, budget: int) -> Tuple[float, Alloc]:
+        budget = self._q(budget)
+        alloc = self.allocate(decoding, prefill_sorted, budget)
+        return self.predictor.predict(self.to_batch(alloc)), alloc
+
+    def pred(self, budget: int, decoding, prefill_sorted) -> float:
+        budget = self._q(budget)
+        alloc = self.allocate(decoding, prefill_sorted, budget)
+        return self.predictor.predict(self.to_batch(alloc))
+
+    def forward_next(self, decoding, prefill_sorted, alloc1: Alloc,
+                     budget2: int):
+        """(predicted_time, scheduled_tokens) of the next iteration's batch,
+        with the queue advanced past window 1 (see pred_next)."""
+        batch = self._next_batch(decoding, prefill_sorted, alloc1, budget2)
+        return self.predictor.predict(batch), sum(c for c, _ in batch)
+
+    def time_to_budget_next(self, decoding, prefill_sorted, alloc1: Alloc,
+                            t_limit: float) -> int:
+        """TimeToBudget evaluated on the post-window-1 queue."""
+        lo = len(decoding)
+        hi = self.max_budget
+        pred = lambda b: self.predictor.predict(
+            self._next_batch(decoding, prefill_sorted, alloc1, b))
+        if pred(hi) <= t_limit:
+            return hi
+        if pred(lo) > t_limit:
+            return lo
+        while hi - lo > max(1, self.quantum):
+            mid = (lo + hi) // 2
+            if pred(mid) <= t_limit:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+    def _next_batch(self, decoding, prefill_sorted, alloc1: Alloc, budget2: int):
+        taken = {id(r): n for r, n in alloc1}
+        batch = [(1, r.context_len() + 1) for r in decoding]
+        left = budget2 - len(batch)
+        for r in prefill_sorted:
+            got = taken.get(id(r), 0)
+            rem = r.remaining_prefill() - got
+            if rem <= 0:
+                if left > 0:
+                    batch.append((1, r.prompt_len))
+                    left -= 1
+                continue
+            if left <= 0:
+                continue
+            take = min(rem, left)
+            batch.append((take, r.context_len() + got))
+            left -= take
+        return batch
+
+    def pred_next(self, decoding, prefill_sorted, alloc1: Alloc, budget2: int) -> float:
+        """Predicted time of the *next* iteration's batch, with the queue
+        advanced past window 1: chunks allocated in window 1 are subtracted
+        and prefills that complete become decodes. (Alg. 1 writes
+        Pred(B_sigma - b, D, P) on the unchanged queue; taken literally both
+        windows would allocate the same work twice and deferral would always
+        look free.)"""
+        return self.predictor.predict(
+            self._next_batch(decoding, prefill_sorted, alloc1, budget2))
+
+    def time_to_budget(self, decoding, prefill_sorted, t_limit: float) -> int:
+        """Largest budget whose predicted time fits in ``t_limit``."""
+        lo = len(decoding)
+        hi = self.max_budget
+        if self.pred(hi, decoding, prefill_sorted) <= t_limit:
+            return hi
+        if self.pred(lo, decoding, prefill_sorted) > t_limit:
+            return lo
+        while hi - lo > max(1, self.quantum):
+            mid = (lo + hi) // 2
+            if self.pred(mid, decoding, prefill_sorted) <= t_limit:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+    def _q(self, budget: int) -> int:
+        if self.quantum <= 1:
+            return budget
+        return max(0, budget // self.quantum * self.quantum)

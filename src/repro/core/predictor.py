@@ -1,0 +1,144 @@
+"""Batch Latency Predictor (paper §3.2).
+
+Per-scene linear experts + a global fallback model (Eq. 5):
+
+    T_hat = b^(m) + sum_j w_j^(m) x_j
+
+Training combines offline initialization with online incremental updates:
+sufficient statistics (X^T X, X^T y) are accumulated per scene with
+exponential decay; every ``refit_interval`` observations the ridge solution is
+recomputed and *hot-swapped* (the live coefficient set is replaced atomically,
+mirroring the paper's background-thread calibration). A scene expert is only
+activated once its sample count reaches ``expert_threshold``; otherwise the
+global model answers (paper §3.2 "Model training").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.features import NUM_FEATURES, SCENES, batch_features, scene_of
+
+
+@dataclasses.dataclass
+class _LinModel:
+    w: np.ndarray            # [NUM_FEATURES]
+    b: float
+
+    def predict(self, x: np.ndarray) -> float:
+        return float(x @ self.w + self.b)
+
+
+class _SceneStats:
+    """Decayed sufficient statistics for ridge regression with intercept."""
+
+    def __init__(self, dim: int, decay: float = 0.999):
+        d = dim + 1
+        self.xtx = np.zeros((d, d))
+        self.xty = np.zeros(d)
+        self.count = 0
+        self.decay = decay
+
+    def add(self, x: np.ndarray, y: float) -> None:
+        xa = np.concatenate([x, [1.0]])
+        self.xtx = self.decay * self.xtx + np.outer(xa, xa)
+        self.xty = self.decay * self.xty + xa * y
+        self.count += 1
+
+    def solve(self, ridge: float) -> Optional[_LinModel]:
+        if self.count == 0:
+            return None
+        d = self.xtx.shape[0]
+        reg = ridge * np.eye(d)
+        reg[-1, -1] = 1e-12  # do not regularize the intercept
+        try:
+            beta = np.linalg.solve(self.xtx + reg, self.xty)
+        except np.linalg.LinAlgError:
+            return None
+        return _LinModel(w=beta[:-1], b=float(beta[-1]))
+
+
+class BatchLatencyPredictor:
+    """Scene-expert linear latency predictor with online hot-swap refit."""
+
+    def __init__(self, ridge: float = 1e-4, expert_threshold: int = 64,
+                 refit_interval: int = 256, feature_scale: float = 1e-4,
+                 decay: float = 0.9995):
+        self.ridge = ridge
+        self.expert_threshold = expert_threshold
+        self.refit_interval = refit_interval
+        # feature magnitudes span ~6 orders; scale for conditioning
+        self.fscale = feature_scale
+        self.stats: Dict[str, _SceneStats] = {
+            s: _SceneStats(NUM_FEATURES, decay) for s in SCENES}
+        self.global_stats = _SceneStats(NUM_FEATURES, decay)
+        self.models: Dict[str, Optional[_LinModel]] = {s: None for s in SCENES}
+        self.global_model: Optional[_LinModel] = None
+        self._since_refit = 0
+        self.observed = 0
+
+    # ---- featurization helpers ----------------------------------------------
+    def _x(self, feats: np.ndarray) -> np.ndarray:
+        return feats * self.fscale
+
+    # ---- offline init (paper: "offline-collected batch runtime data") -------
+    def fit_offline(self, samples: Sequence[Tuple[Sequence[Tuple[int, int]], float]]):
+        for batch, y in samples:
+            self._accumulate(batch, y)
+        self._refit()
+
+    # ---- online path ---------------------------------------------------------
+    def observe(self, batch, latency: float) -> None:
+        self._accumulate(batch, latency)
+        self._since_refit += 1
+        if self._since_refit >= self.refit_interval:
+            self._refit()   # hot swap
+
+    def _accumulate(self, batch, y: float) -> None:
+        feats, scene = batch_features(batch), scene_of(batch)
+        x = self._x(feats)
+        self.stats[scene].add(x, y)
+        self.global_stats.add(x, y)
+        self.observed += 1
+
+    def _refit(self) -> None:
+        new_models = {}
+        for s in SCENES:
+            st = self.stats[s]
+            new_models[s] = st.solve(self.ridge) if st.count >= self.expert_threshold else None
+        new_global = self.global_stats.solve(self.ridge)
+        # hot swap: replace the whole coefficient set atomically
+        self.models = new_models
+        self.global_model = new_global
+        self._since_refit = 0
+
+    # ---- inference ------------------------------------------------------------
+    def predict(self, batch) -> float:
+        if not batch:
+            return 0.0
+        feats, scene = batch_features(batch), scene_of(batch)
+        x = self._x(feats)
+        model = self.models.get(scene) or self.global_model
+        if model is None:
+            # cold start: crude proportional guess keeps the scheduler alive
+            return 1e-5 * float(sum(c for c, _ in batch) + 1)
+        return max(model.predict(x), 1e-6)
+
+    # ---- evaluation (paper Table 5) -------------------------------------------
+    def evaluate(self, samples) -> dict:
+        ys, yh = [], []
+        for batch, y in samples:
+            ys.append(y)
+            yh.append(self.predict(batch))
+        ys, yh = np.asarray(ys), np.asarray(yh)
+        err = yh - ys
+        ss_res = float(np.sum(err ** 2))
+        ss_tot = float(np.sum((ys - ys.mean()) ** 2)) or 1e-12
+        return {
+            "mae": float(np.mean(np.abs(err))),
+            "rmse": float(np.sqrt(np.mean(err ** 2))),
+            "r2": 1.0 - ss_res / ss_tot,
+            "n": len(ys),
+        }

@@ -1,0 +1,138 @@
+"""SlidingServe closed-loop scheduler (paper Fig. 3) + the Violation Checker.
+
+Each round: (1) sort candidates with the Multi-Level Priority Sorter, (2)
+build the *maximal candidate batch* under the server budget, (3) submit it to
+the Violation Checker, (4) route to BatchConstructor (risk) or SlidingChunker
+(no risk), (5) emit the executable batch (request-level token allocation).
+
+``observe`` closes the loop: real batch latencies feed the online predictor
+refit and the throughput estimate rho_t the sorter's urgency uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.batch_constructor import batch_constructor
+from repro.core.forwarder import Alloc, BatchForwarder
+from repro.core.predictor import BatchLatencyPredictor
+from repro.core.sliding_chunker import sliding_chunker, window_bounds
+from repro.core.sorter import sort_candidates
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class Decision:
+    alloc: Alloc                      # [(request, tokens this round)]
+    predicted_time: float
+    budget: int
+    route: str                        # "sliding" | "construct" | baseline name
+
+    def batch(self) -> List[Tuple[int, int]]:
+        return [(n, r.context_len()) for r, n in self.alloc]
+
+
+class SchedulerBase:
+    """Common interface + shared observation machinery."""
+
+    name = "base"
+
+    def __init__(self, predictor: Optional[BatchLatencyPredictor] = None,
+                 max_budget: int = 4096, budget_quantum: int = 1,
+                 max_iter_time: float = 0.05):
+        self.predictor = predictor or BatchLatencyPredictor()
+        self.F = BatchForwarder(self.predictor, max_budget, budget_quantum)
+        self.max_budget = max_budget
+        # Responsiveness guard: cap a single iteration's target duration so a
+        # large chunk scheduled during a lull cannot blind the server to
+        # arrivals (static-chunk systems get this implicitly from their chunk
+        # size; dynamic chunking needs it explicitly).
+        self.max_iter_time = max_iter_time
+        self.rho = 1000.0          # tokens/s EMA (Eq. 9's rho_t)
+        self._rho_beta = 0.9
+
+    def schedule(self, t: float, waiting: Sequence[Request],
+                 prefilling: Sequence[Request],
+                 decoding: Sequence[Request]) -> Optional[Decision]:
+        raise NotImplementedError
+
+    def observe(self, batch: Sequence[Tuple[int, int]], latency: float) -> None:
+        self.predictor.observe(batch, latency)
+        if latency > 0:
+            # rho_t estimates how fast *prefill* work drains (Eq. 9 divides
+            # remaining prefill tokens by it), so measure prefill-token
+            # throughput on rounds that carry prefill work; decode-only
+            # rounds would bias the estimate far low.
+            prefill_tokens = sum(c for c, _ in batch if c > 1)
+            if prefill_tokens > 0:
+                tput = prefill_tokens / latency
+                self.rho = self._rho_beta * self.rho + (1 - self._rho_beta) * tput
+
+
+class SlidingServeScheduler(SchedulerBase):
+    name = "slidingserve"
+
+    def __init__(self, predictor=None, max_budget: int = 4096,
+                 alpha: float = 0.5, budget_quantum: int = 1,
+                 enable_mlps: bool = True, enable_bc: bool = True,
+                 enable_sliding: bool = True, clamp_current: bool = True,
+                 knapsack_granularity: int = 16, max_iter_time: float = 0.05,
+                 objective: str = "tokens"):
+        super().__init__(predictor, max_budget, budget_quantum,
+                         max_iter_time=max_iter_time)
+        self.objective = objective
+        self.alpha = alpha
+        self.enable_mlps = enable_mlps
+        self.enable_bc = enable_bc
+        self.enable_sliding = enable_sliding
+        self.clamp_current = clamp_current
+        self.knapsack_granularity = knapsack_granularity
+
+    def _sorted(self, t, waiting, prefilling):
+        if self.enable_mlps:
+            return sort_candidates(prefilling, waiting, t, self.rho, self.alpha)
+        cands = list(prefilling) + list(waiting)
+        return sorted(cands, key=lambda r: r.ttft_deadline())   # EDF fallback
+
+    def schedule(self, t, waiting, prefilling, decoding):
+        if not (waiting or prefilling or decoding):
+            return None
+        P = self._sorted(t, waiting, prefilling)
+        D = list(decoding)
+        t_cur, t_next = window_bounds(D, t, default_cur=self.max_iter_time)
+        t_cur = min(t_cur, self.max_iter_time)
+
+        # (4) Violation Checker on the maximal candidate batch. The paper's
+        # risk test (slack < T_full) is refined with the Eq.-10 urgency gate:
+        # a request is at *actionable* risk only if it also cannot complete at
+        # the observed prefill pace — otherwise normal capped rounds will
+        # finish it and a dedicated BC batch would pay its cost for nothing.
+        route = "sliding"
+        if self.enable_bc and P:
+            t_full, _ = self.F.forward(D, P, self.max_budget)
+            from repro.core.sorter import normalized_urgency
+            if any(r.ttft_slack(t) < t_full and r.ttft_slack(t) > 0
+                   and normalized_urgency(r, t, self.rho) > 1.0 for r in P):
+                res = batch_constructor(D, P, self.max_budget, t, self.F,
+                                        granularity=self.knapsack_granularity)
+                if res is not None:
+                    budget, alloc = res
+                    pred = self.predictor.predict(
+                        [(n, r.context_len()) for r, n in alloc])
+                    return Decision(alloc, pred, budget, "construct")
+
+        # (5) SlidingChunker branch (or single-step when ablated off).
+        if self.enable_sliding:
+            budget, alloc, pred = sliding_chunker(
+                D, P, self.max_budget, t, t_cur, t_next, self.F,
+                clamp_current=self.clamp_current, objective=self.objective)
+        else:
+            budget = self.F.time_to_budget(D, P, t_cur)
+            pred, alloc = self.F.forward(D, P, budget)
+        if not alloc and (D or P):
+            # liveness guard: never idle while work is pending
+            budget = max(self.F.time_to_budget(D, P, t_cur), len(D) + 1)
+            pred, alloc = self.F.forward(D, P, budget)
+        if not alloc:
+            return None
+        return Decision(alloc, pred, budget, route)

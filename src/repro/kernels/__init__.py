@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving hot paths.
+
+The paper's contribution is scheduler-level, but chunked prefill and paged
+decode are the compute the scheduler feeds; these kernels are the TPU-native
+implementations (VMEM BlockSpec tiling, MXU-aligned tiles, fp32 online-softmax
+state). Each kernel ships with an ``ops.py`` jit wrapper and a pure-jnp
+oracle in ``ref.py``; CPU validation runs in ``interpret=True`` mode.
+
+Kernels:
+- ``chunked_prefill_attention`` — flash attention of a query chunk against
+  cache prefix + itself (the exact shape chunked prefill creates).
+- ``paged_attention`` — decode-time GQA attention over a block-table paged KV
+  cache (scalar-prefetch indexed).
+- ``mamba_scan`` — selective-state-space scan, chunked over sequence with a
+  VMEM-carried state.
+- ``mlstm_chunkwise`` — xLSTM matrix-memory cell, chunkwise-parallel form.
+"""

@@ -1,0 +1,140 @@
+"""Chunked-prefill flash attention Pallas TPU kernel.
+
+Computes attention of a query *chunk* (the tokens scheduled this iteration,
+at sequence offset ``q_offset``) against the full KV buffer (cache prefix +
+the chunk itself), with causal + sliding-window + valid-length masking.
+
+TPU adaptation (vs. the CUDA flash kernels vLLM drives):
+
+* grid ``(B*H, num_q_tiles, num_kv_tiles)`` — the last axis is innermost and
+  sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+  scratch and is carried across kv tiles; no atomics / warp shuffles needed.
+* BlockSpec tiles ``(block_q, head_dim)`` / ``(block_k, head_dim)`` sized to
+  MXU geometry (multiples of 128 on the matmul dims) and VMEM budget
+  (~(bq + 2*bk) * D * 4B + bq*bk*4B per step).
+* GQA without KV repetition: the kv BlockSpec index map folds the q-head ->
+  kv-head mapping (``h // group``), so KV tiles are fetched once per kv head.
+* fp32 softmax state; matmuls accumulate fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref,           # scalar prefetch: [B] valid kv lengths
+            q_ref, k_ref, v_ref,   # [1, bq, D], [1, bk, D], [1, bk, D]
+            o_ref,                 # [1, bq, D]
+            m_ref, l_ref, acc_ref,  # VMEM scratch: [bq], [bq], [bq, D]
+            *, scale: float, q_offset: int, causal: bool, window: int,
+            softcap: float, block_q: int, block_k: int, num_kv_tiles: int,
+            num_heads: int):
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    b = h // num_heads
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                     # [bq, D]
+    k = k_ref[0]                                     # [bk, D]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < lengths_ref[b]
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_tiles - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(
+    q: jnp.ndarray,        # [B, H, Sq, D]
+    k: jnp.ndarray,        # [B, Hkv, Sk, D]
+    v: jnp.ndarray,        # [B, Hkv, Sk, D]
+    lengths: jnp.ndarray,  # [B] int32 valid kv lengths
+    *,
+    scale: float,
+    q_offset: int = 0,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, q_offset=q_offset, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, num_kv_tiles=nk,
+        num_heads=H)
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, i, j, L: (h, i, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, i, j, L, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda h, i, j, L, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda h, i, j, L: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

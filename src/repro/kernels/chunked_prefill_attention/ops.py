@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the chunked-prefill attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.chunked_prefill_attention.kernel import chunked_prefill_attention
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "q_offset", "causal", "window", "softcap", "block_q", "block_k",
+    "interpret"))
+def chunked_prefill_attention_op(q, k, v, lengths, *, scale, q_offset=0,
+                                 causal=True, window=0, softcap=0.0,
+                                 block_q=128, block_k=128, interpret=False):
+    return chunked_prefill_attention(
+        q, k, v, lengths, scale=scale, q_offset=q_offset, causal=causal,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the chunked-prefill attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_prefill_attention_ref(q, k, v, lengths, *, scale, q_offset=0,
+                                  causal=True, window=0, softcap=0.0):
+    """q: [B, H, Sq, D]; k/v: [B, Hkv, Sk, D]; lengths: [B]."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = H // Hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.broadcast_to(k_pos < lengths[:, None, None, None], s.shape)
+    if causal:
+        mask &= (q_pos >= k_pos)[None, None]
+    if window > 0:
+        mask &= (q_pos - k_pos < window)[None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vr.dtype), vr,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

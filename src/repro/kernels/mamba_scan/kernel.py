@@ -1,0 +1,92 @@
+"""Selective-state-space (Mamba-1) scan Pallas TPU kernel.
+
+The CUDA selective-scan kernel streams the recurrence through shared memory
+with warp-level parallel prefix tricks; the TPU adaptation instead:
+
+* parallelizes over the *channel* dimension (grid axis ``d_tiles`` — channels
+  are fully independent in Mamba-1) and keeps the time recurrence sequential
+  inside the kernel, where the state ``h [d_tile, n]`` lives in VMEM scratch
+  (VPU elementwise work; there is no matmul to win on the MXU here),
+* chunks the sequence on the innermost grid axis so each step only holds a
+  ``[chunk, d_tile]`` activation tile in VMEM, with the state carried across
+  chunk steps in scratch — HBM traffic is exactly one read of (x, dt, B, C)
+  and one write of y.
+
+Layout note: time-major ``[S, d]`` blocks so the lane dimension (128-wide) is
+the channel axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,   # blocks
+            y_ref,                                       # out [1, c, dt]
+            h_ref,                                       # scratch [dt, n] f32
+            *, chunk: int, d_state: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...]                                # [d_tile, n] f32 (negative)
+    Dp = d_ref[...]                               # [d_tile]
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)     # [d_tile]
+        dt_t = dt_ref[0, t].astype(jnp.float32)   # [d_tile]
+        b_t = b_ref[0, t].astype(jnp.float32)     # [n]
+        c_t = c_ref[0, t].astype(jnp.float32)     # [n]
+        da = jnp.exp(dt_t[:, None] * A)           # [d_tile, n]
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1) + Dp * x_t
+        y_ref[0, t] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+def mamba_scan(
+    x: jnp.ndarray,    # [B, S, d_inner]
+    dt: jnp.ndarray,   # [B, S, d_inner]  (already softplus'd)
+    Bc: jnp.ndarray,   # [B, S, n]
+    Cc: jnp.ndarray,   # [B, S, n]
+    A: jnp.ndarray,    # [d_inner, n] f32 (negative)
+    D: jnp.ndarray,    # [d_inner] f32
+    *,
+    chunk: int = 256,
+    d_tile: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, d_inner = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, S)
+    d_tile = min(d_tile, d_inner)
+    assert S % chunk == 0 and d_inner % d_tile == 0
+    nc, nd = S // chunk, d_inner // d_tile
+
+    kernel = functools.partial(_kernel, chunk=chunk, d_state=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, di, cj: (b, cj, di)),
+            pl.BlockSpec((1, chunk, d_tile), lambda b, di, cj: (b, cj, di)),
+            pl.BlockSpec((1, chunk, n), lambda b, di, cj: (b, cj, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, di, cj: (b, cj, 0)),
+            pl.BlockSpec((d_tile, n), lambda b, di, cj: (di, 0)),
+            pl.BlockSpec((d_tile,), lambda b, di, cj: (di,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_tile), lambda b, di, cj: (b, cj, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, d_inner), x.dtype),
+        scratch_shapes=[pltpu.VMEM((d_tile, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bc, Cc, A.astype(jnp.float32), D.astype(jnp.float32))
+    return out

@@ -1,0 +1,15 @@
+"""Jitted public wrapper for the Mamba scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_tile", "interpret"))
+def mamba_scan_op(x, dt, Bc, Cc, A, D, *, chunk=256, d_tile=256,
+                  interpret=False):
+    return mamba_scan(x, dt, Bc, Cc, A, D, chunk=chunk, d_tile=d_tile,
+                      interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Mamba selective scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, Bc, Cc, A, D):
+    """x/dt: [B, S, d]; Bc/Cc: [B, S, n]; A: [d, n]; D: [d]."""
+    B, S, d = x.shape
+    n = A.shape[1]
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * Af[None])
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bc.transpose(1, 0, 2).astype(jnp.float32),
+          Cc.transpose(1, 0, 2).astype(jnp.float32))
+    h0 = jnp.zeros((B, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + D.astype(jnp.float32)[None, None, :] * x.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,128 @@
+"""xLSTM mLSTM chunkwise-parallel Pallas TPU kernel.
+
+The mLSTM cell keeps a matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T with
+scalar-per-head gates, which admits the chunkwise form: within a chunk the
+output is an attention-like product with a log-gate decay matrix (MXU
+matmuls); across chunks a stabilized (C, n, m) state is carried.
+
+TPU mapping: grid ``(B*H, num_chunks)`` with the chunk axis sequential; the
+carried state ``C [D, D], n [D], m [1]`` lives in fp32 VMEM scratch. All four
+within-chunk products ([c,D]x[D,c], [c,c]x[c,D], [c,D]x[D,D]) are
+MXU-aligned when c and D are multiples of 128 (the xlstm-125m head dim 384 =
+3x128 tiles). Stabilizers follow the xLSTM paper: row-max m over the decay
+logits, denominator max(|n.q|, exp(-m)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref,   # [1,c,D]x3, [1,c]x2
+            o_ref,                                 # [1,c,D]
+            C_ref, n_ref, m_ref,                   # scratch [D,D],[D],[1]
+            *, chunk: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0]                                   # [c, D]
+    k = k_ref[0]
+    v = v_ref[0]
+    log_i = li_ref[0].astype(jnp.float32)          # [c]
+    log_f = lf_ref[0].astype(jnp.float32)          # [c]
+
+    F = jnp.cumsum(log_f)                          # inclusive in-chunk decay
+    m0 = m_ref[0]
+
+    # --- row stabilizer: max over inter (F_t + m0) and intra (F_t - F_s + i_s)
+    e = F[:, None] - F[None, :] + log_i[None, :]   # [c, c]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    e = jnp.where(tri, e, NEG_INF)
+    m_row = jnp.maximum(F + m0, jnp.max(e, axis=1))  # [c]
+
+    # --- inter-chunk contribution (carried state)
+    inter_scale = jnp.exp(F + m0 - m_row)          # [c]
+    acc = jax.lax.dot_general(q, C_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc = acc * inter_scale[:, None]               # [c, D]
+    nrm = (q.astype(jnp.float32) @ n_ref[...]) * inter_scale  # [c]
+
+    # --- intra-chunk (attention-like with decay weights)
+    d_mat = jnp.exp(e - m_row[:, None])            # [c, c]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * d_mat
+    acc = acc + jax.lax.dot_general(s.astype(v.dtype), v,
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    nrm = nrm + jnp.sum(s, axis=1)
+
+    denom = jnp.maximum(jnp.abs(nrm), jnp.exp(-jnp.minimum(m_row, 30.0)))
+    o_ref[0] = (acc / jnp.maximum(denom, 1e-30)[:, None]).astype(o_ref.dtype)
+
+    # --- carry state to the next chunk
+    F_last = F[chunk - 1]
+    cand = F_last - F + log_i                      # [c]
+    m_new = jnp.maximum(F_last + m0, jnp.max(cand))
+    w = jnp.exp(cand - m_new)                      # [c]
+    decay = jnp.exp(F_last + m0 - m_new)
+    kw = k.astype(jnp.float32) * w[:, None]
+    C_ref[...] = decay * C_ref[...] + jax.lax.dot_general(
+        kw, v.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = decay * n_ref[...] + jnp.sum(kw, axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_chunkwise(
+    q: jnp.ndarray,      # [B, H, S, D] (k pre-scaled by 1/sqrt(D) upstream)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_i: jnp.ndarray,  # [B, H, S] input-gate logits
+    log_f: jnp.ndarray,  # [B, H, S] log-sigmoid forget gates
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    qf = q.reshape(B * H, S, D)
+    kf = k.reshape(B * H, S, D)
+    vf = v.reshape(B * H, S, D)
+    lif = log_i.reshape(B * H, S)
+    lff = log_f.reshape(B * H, S)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda h, cj: (h, cj, 0)),
+            pl.BlockSpec((1, chunk, D), lambda h, cj: (h, cj, 0)),
+            pl.BlockSpec((1, chunk, D), lambda h, cj: (h, cj, 0)),
+            pl.BlockSpec((1, chunk), lambda h, cj: (h, cj)),
+            pl.BlockSpec((1, chunk), lambda h, cj: (h, cj)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, D), lambda h, cj: (h, cj, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lif, lff)
+    return out.reshape(B, H, S, D)

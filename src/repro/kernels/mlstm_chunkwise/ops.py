@@ -1,0 +1,14 @@
+"""Jitted public wrapper for the mLSTM chunkwise kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_chunkwise.kernel import mlstm_chunkwise
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunkwise_op(q, k, v, log_i, log_f, *, chunk=128, interpret=False):
+    return mlstm_chunkwise(q, k, v, log_i, log_f, chunk=chunk,
+                           interpret=interpret)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the mLSTM chunkwise kernel: the stabilized quadratic
+(parallel) form over the full sequence (xLSTM paper, appendix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mlstm_ref(q, k, v, log_i, log_f):
+    """q/k/v: [B, H, S, D]; log_i/log_f: [B, H, S]."""
+    B, H, S, D = q.shape
+    F = jnp.cumsum(log_f.astype(jnp.float32), axis=-1)       # [B,H,S]
+    e = F[..., :, None] - F[..., None, :] + log_i.astype(jnp.float32)[..., None, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    e = jnp.where(tri, e, NEG_INF)
+    m = jnp.max(e, axis=-1)                                   # [B,H,S]
+    d = jnp.exp(e - m[..., None])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * d
+    nrm = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1)),
+                      jnp.exp(-jnp.minimum(m, 30.0)))
+    out = jnp.einsum("bhqk,bhkd->bhqd", s, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return (out / jnp.maximum(nrm, 1e-30)[..., None]).astype(q.dtype)

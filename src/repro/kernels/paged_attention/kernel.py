@@ -1,0 +1,128 @@
+"""Paged-attention decode Pallas TPU kernel.
+
+One new query token per sequence attends over a *paged* KV cache: physical
+pages of ``page_size`` tokens indexed through a per-sequence block table
+(vLLM's PagedAttention layout, §4 substrate).
+
+TPU adaptation (vs. the CUDA kernel):
+
+* the block table is a **scalar-prefetch** operand — BlockSpec index maps read
+  it to translate (sequence, logical page) -> physical page, so page gathers
+  become ordinary prefetched VMEM tile loads (no pointer chasing on the
+  compute path, no per-warp gather).
+* grid ``(B, Hkv, pages_per_seq)``; the page axis is innermost/sequential, so
+  the online-softmax state for the G grouped query heads rides in VMEM
+  scratch, and pages past ``ceil(len/page_size)`` skip their FLOPs with
+  ``pl.when`` (their DMA is position-masked out anyway).
+* per-step compute is a [G, D] x [D, page_size] MXU matmul per kv head —
+  decode is HBM-bound, and this layout streams each KV page exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables_ref, lengths_ref,   # scalar prefetch
+            q_ref, k_ref, v_ref,             # [1,1,G,D], [1,ps,D], [1,ps,D]
+            o_ref,                           # [1,1,G,D]
+            m_ref, l_ref, acc_ref,           # VMEM scratch [G],[G],[G,D]
+            *, scale: float, window: int, softcap: float,
+            page_size: int, num_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    pages_needed = (length + page_size - 1) // page_size
+
+    @pl.when(j < pages_needed)
+    def _compute():
+        q = q_ref[0, 0]                                  # [G, D]
+        k = k_ref[0, 0]                                  # [ps, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [G, ps]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = k_pos < length
+        if window > 0:
+            mask &= k_pos >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jnp.ndarray,             # [B, H, D]
+    k_pages: jnp.ndarray,       # [Hkv, P_total, page_size, D]
+    v_pages: jnp.ndarray,       # [Hkv, P_total, page_size, D]
+    block_tables: jnp.ndarray,  # [B, pages_per_seq] int32
+    lengths: jnp.ndarray,       # [B] int32
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    Hkv, P_total, page_size, _ = k_pages.shape
+    G = H // Hkv
+    pages_per_seq = block_tables.shape[1]
+
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        page_size=page_size, num_pages=pages_per_seq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda b, h, j, bt, L: (h, bt[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda b, h, j, bt, L: (h, bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, D)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the paged-attention decode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "interpret"))
+def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *, scale,
+                       window=0, softcap=0.0, interpret=False):
+    return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                           scale=scale, window=window, softcap=softcap,
+                           interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the paged-attention decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale, window=0, softcap=0.0):
+    """q: [B, H, D]; pages: [Hkv, P, ps, D]; block_tables: [B, n]; lengths [B]."""
+    B, H, D = q.shape
+    Hkv, _, ps, _ = k_pages.shape
+    G = H // Hkv
+    n = block_tables.shape[1]
+    # gather each sequence's logical KV [B, Hkv, n*ps, D]
+    k_seq = k_pages[:, block_tables]            # [Hkv, B, n, ps, D]
+    v_seq = v_pages[:, block_tables]
+    k_seq = k_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n * ps, D)
+    v_seq = v_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n * ps, D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_seq,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(n * ps)
+    mask = k_pos[None, None, None, :] < lengths[:, None, None, None]
+    if window > 0:
+        mask &= k_pos[None, None, None, :] >= (lengths - window)[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_seq.dtype), v_seq,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, per-arch sharding rules, multi-pod dry-run."""

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device query, and tests/benches must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``.
+
+    The ``pod`` axis carries only data parallelism + ZeRO sharding (gradient
+    reduce-scatter / all-gather), so the only pod-crossing traffic is
+    DCN-friendly; ``model`` is the intra-pod tensor/expert-parallel axis.
+
+    ``REPRO_FORCE_MESH`` (e.g. "4x8" / "2x2x8") overrides the shape — used by
+    tests to exercise the full launch stack on few host devices.
+    """
+    import os
+    forced = os.environ.get("REPRO_FORCE_MESH")
+    if forced:
+        dims = tuple(int(x) for x in forced.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        return jax.make_mesh(dims, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis names of a mesh (('pod','data') or ('data',))."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,52 @@
+"""Serving launcher: the SlidingServe engine on a real model.
+
+On this container it serves reduced configs on CPU; on TPU the same entry
+point builds the production mesh and shards the step functions (the engine
+loop is identical — see repro/serving/engine.py).
+
+    python -m repro.launch.serve --arch llama3.2-3b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SlidingServeScheduler
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--qps", type=float, default=2.0)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--max-budget", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    sched = SlidingServeScheduler(max_budget=args.max_budget, max_iter_time=2.0)
+    engine = ServingEngine(cfg, sched, max_slots=4, max_len=512)
+    rng = np.random.default_rng(0)
+    inter = rng.exponential(1.0 / args.qps, args.requests)
+    arrivals = np.cumsum(inter)
+    reqs = [Request(rid=i, arrival=float(arrivals[i]),
+                    prompt_len=int(rng.integers(16, 128)),
+                    max_output=int(rng.integers(4, 12)),
+                    ttft_slo=30.0, tbt_slo=30.0)
+            for i in range(args.requests)]
+    out = engine.serve(reqs, max_wall_s=300.0)
+    print(f"finished {len(out['finished'])}/{len(reqs)}; "
+          f"iterations={out['stats'].iterations} wall={out['wall']:.1f}s")
+    for r in out["finished"]:
+        print(f"  req {r.rid}: ttft={(r.first_token_time - r.arrival):.2f}s "
+              f"out={out['outputs'][r.rid]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Per-arch PartitionSpec rules: params, optimizer state, caches, inputs.
+
+Rules are name/shape-driven over the param pytree (Megatron-style TP on the
+``model`` axis, DP over (``pod``, ``data``)):
+
+* column-parallel: attention q/k/v, MLP up/gate, Mamba in-proj, MLA q_b/kv_b
+  (output-feature dim on ``model``);
+* row-parallel: attention/MLP/Mamba output projections (input-feature dim on
+  ``model``);
+* expert-parallel: MoE expert stacks sharded on the expert dim;
+* vocab-parallel embedding / LM head;
+* small tensors (norms, biases, routers, MLA latent down-projs) replicated.
+
+KV caches shard heads on ``model`` when the head count divides the axis, else
+the *sequence* dim (GSPMD then computes decode softmax as partial reductions +
+tiny all-reduces — flash-decode semantics). Recurrent states shard d_inner.
+
+Tiny-model exception: xlstm-125m blocks are replicated over ``model`` (its
+heads/dims don't fill a 16-wide TP axis); it runs DP-wide instead.
+
+ZeRO: optimizer moments/master weights additionally shard their largest
+still-replicated dim over the DP axes (``zero_shard``).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import dp_axes, dp_size
+
+# leaf-name patterns -> which dim (from the end, ignoring the leading stack
+# dim) goes on the model axis. "col" = last dim, "row" = second-to-last.
+_COL = re.compile(
+    r"(wq'\]|wk'\]|wv'\]|wi_gate'\]|wi_up'\]|in_proj'\]|up_proj'\]|"
+    r"dt_proj'\]|wq_b'\]|w_gates'\]|conv_w'\]|conv_b'\]|dt_bias'\]|D'\])")
+_ROW = re.compile(r"(wo'\]|out_proj'\]|down_proj'\]|x_proj'\]|A_log'\])")
+_EXPERT = re.compile(r"(w_gate'\]|w_up'\]|w_down'\])")
+_REPL = re.compile(
+    r"(ln'\]|norm'\]|gn_scale'\]|gate_bias'\]|router|bias|embed'\]|"
+    r"wq_a'\]|wkv_a'\]|wkv_b'\]|q_ln'\]|kv_ln'\]|r_gates'\]|proj'\])")
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                   tp: str) -> P:
+    nd = len(shape)
+    if path.endswith("['embed']"):
+        return P(tp, None)
+    if path.endswith("['lm_head']"):
+        return P(None, tp)
+    if cfg.name == "xlstm-125m":
+        return P(*([None] * nd))          # DP-only tiny model
+    if _EXPERT.search(path):
+        # [*, E, d, f] / [*, E, f, d]: experts on model (EP)
+        return P(*([None] * (nd - 3) + [tp, None, None]))
+    if path.endswith("['wkv_b']"):
+        # [*, kvr, H*(dn+dv)]: heads (last dim) on model
+        return P(*([None] * (nd - 1) + [tp]))
+    if _REPL.search(path):
+        return P(*([None] * nd))
+    if _ROW.search(path):
+        if path.endswith("['A_log']") or path.endswith("['x_proj']"):
+            # [*, d_inner, n]/[*, d_inner, dtr+2n]: d_inner on model
+            return P(*([None] * (nd - 2) + [tp, None]))
+        return P(*([None] * (nd - 2) + [tp, None]))
+    if _COL.search(path):
+        return P(*([None] * (nd - 1) + [tp]))
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                fsdp: bool = False) -> Any:
+    """``fsdp=True`` additionally shards each parameter's largest
+    still-replicated dim over the DP axes (ZeRO-3): GSPMD all-gathers weights
+    at use — inside the layer scan that is per-layer gathering, trading
+    collective bytes for the 1/dp weight-memory cut that lets 398B/671B
+    models fit 16GB chips (see EXPERIMENTS.md §Perf)."""
+    tp = "model"
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        spec = _spec_for_leaf(p, leaf.shape, cfg, tp)
+        spec = _validated(spec, leaf.shape, mesh)
+        if fsdp:
+            spec = zero_shard(spec, leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _validated(spec: P, shape, mesh: Mesh) -> P:
+    """Drop shardings that do not divide evenly (avoid padded-shard blowup)."""
+    parts = []
+    for i, s in enumerate(spec):
+        if s is None:
+            parts.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        parts.append(s if shape[i] % size == 0 else None)
+    return P(*parts)
+
+
+def zero_shard(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-1: shard the largest still-replicated dim over the DP axes."""
+    dp = dp_axes(mesh)
+    n = dp_size(mesh)
+    # already DP-sharded (e.g. FSDP params): nothing to add
+    for entry in spec:
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            if a in dp:
+                return spec
+    best, best_size = None, 0
+    for i in range(len(shape)):
+        cur = spec[i] if i < len(spec) else None
+        if cur is None and shape[i] % n == 0 and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best is None:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts[best] = dp if len(dp) > 1 else dp[0]
+    return P(*parts)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_shape: Any, pspecs: Any, mesh: Mesh) -> Any:
+    """Moments/master mirror the params + ZeRO sharding; step is replicated."""
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        if p.endswith("['step']"):
+            return P()
+        # strip the leading "['m']"/"['v']"/"['master']" to find the param
+        sub = p.split("]", 1)[1]
+        pspec = _lookup(pspecs, sub)
+        if pspec is None:
+            pspec = P(*([None] * len(leaf.shape)))
+        return zero_shard(pspec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+def _lookup(tree: Any, keystr_path: str) -> Optional[P]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        if jax.tree_util.keystr(path) == keystr_path:
+            return leaf
+    return None
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
+    tp = "model"
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    heads_fit = cfg.num_kv_heads % mesh.shape[tp] == 0
+
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        nd = len(leaf.shape)
+        B = leaf.shape[1] if nd >= 2 else 1
+        bspec = dpa if B % dp_size(mesh) == 0 else None
+        if cfg.name == "xlstm-125m":
+            return _validated(P(*([None, bspec] + [None] * (nd - 2))), leaf.shape, mesh)
+        if re.search(r"\['(k|v|cross_k|cross_v)'\]", p):
+            # [R, B, S, Hkv, Dh]
+            if heads_fit:
+                return _validated(P(None, bspec, None, tp, None), leaf.shape, mesh)
+            return _validated(P(None, bspec, tp, None, None), leaf.shape, mesh)
+        if re.search(r"\['(ckv|kr)'\]", p):
+            # [R, B, S, latent] — shard sequence
+            return _validated(P(None, bspec, tp, None), leaf.shape, mesh)
+        if "['mamba']" in p:
+            # conv [R, B, K-1, di] / ssm [R, B, di, n]
+            if p.endswith("['conv']"):
+                return _validated(P(None, bspec, None, tp), leaf.shape, mesh)
+            return _validated(P(None, bspec, tp, None), leaf.shape, mesh)
+        if "['mlstm']" in p or "['slstm']" in p:
+            return _validated(P(*([None, bspec] + [None] * (nd - 2))), leaf.shape, mesh)
+        return _validated(P(*([None] * nd)), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    return P(dpa, *([None] * extra_dims))
+
+
+def shardings_of(tree_shape: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_shape, spec_tree)

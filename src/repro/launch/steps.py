@@ -1,0 +1,186 @@
+"""Per-(arch x shape) step builders for the dry-run and the real launchers.
+
+``build_cell`` returns the jittable step function plus fully-sharded
+``jax.ShapeDtypeStruct`` stand-ins for every input (weak-type-correct,
+shardable, no device allocation) and the donation indices:
+
+* ``train_4k``   -> train_step(params, opt_state, batch) (loss + AdamW update)
+* ``prefill_32k``-> prefill_step(params, tokens/embeds, cache)
+* ``decode_32k`` / ``long_500k`` -> serve_step(params, cache, tokens, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import cell_skip_reason, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models import moe as moe_mod
+from repro.models.model import (RunCtx, decode_step, init_cache, init_params,
+                                loss_fn, prefill)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Callable
+    inputs: Tuple[Any, ...]          # ShapeDtypeStructs with shardings
+    donate: Tuple[int, ...]
+    cfg: ModelConfig
+    reps_for_roofline: int           # total scanned layer reps (see analysis)
+
+
+def make_rctx(cfg: ModelConfig, mesh: Optional[Mesh], *, train: bool,
+              seq_len: int) -> RunCtx:
+    moe_ctx = moe_mod.MoEContext(
+        impl="ep" if (mesh is not None and cfg.num_experts) else "dense",
+        mesh=mesh,
+        dp_axes=dp_axes(mesh) if mesh is not None else (),
+        tp_axis="model",
+    )
+    block = 1024 if seq_len >= 32768 else 512
+    return RunCtx(moe=moe_ctx, remat="full" if train else "none",
+                  block_q=block, block_k=block,
+                  mlstm_block=min(1024, max(seq_len, 1)),
+                  loss_vocab_blocks=16)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _enc_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if not cfg.enc_dec:
+        return 0
+    if shape.kind == "train":
+        return shape.seq_len // 2
+    return shape.seq_len
+
+
+def _dec_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if cfg.enc_dec and shape.kind == "train":
+        return shape.seq_len // 2
+    return shape.seq_len
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               check_skip: bool = True, fsdp: bool = False,
+               cfg_override: Optional[ModelConfig] = None,
+               wide_dp: bool = False) -> Optional[Cell]:
+    """``wide_dp``: for models whose blocks are replicated over ``model``
+    (xlstm-125m), shard the batch over data AND model axes so every chip does
+    useful work (hillclimb H1 in EXPERIMENTS.md §Perf)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    if check_skip and cell_skip_reason(arch, shape):
+        return None
+    train = shape.kind == "train"
+    rctx = make_rctx(cfg, mesh, train=train, seq_len=shape.seq_len)
+
+    params_shape = _abstract(partial(init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(cfg, params_shape, mesh, fsdp=fsdp)
+    params_in = shd.shardings_of(params_shape, pspecs, mesh)
+    dpa = dp_axes(mesh)
+    dspec = dpa if len(dpa) > 1 else dpa[0]
+    n_dp = dp_size(mesh)
+
+    from repro.models.model import build_stacks
+    reps = sum(r for _, r in build_stacks(cfg))
+
+    def sds(shape_, dtype, spec):
+        return jax.ShapeDtypeStruct(shape_, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    B = shape.global_batch
+    bspec = dspec if B % n_dp == 0 else None
+    if wide_dp:
+        wide_axes = dpa + ("model",)
+        wide_n = n_dp * mesh.shape["model"]
+        if B % wide_n == 0:
+            bspec = wide_axes
+
+    # ---- modality-frontend stubs (input_specs provides embeddings) ---------
+    def frontend_inputs(batch_size: int, for_train: bool):
+        extras = {}
+        if cfg.num_patch_tokens:
+            extras["extra_embeds"] = sds(
+                (batch_size, cfg.num_patch_tokens, cfg.d_model), cfg.dtype,
+                P(bspec, None, None))
+        if cfg.enc_dec:
+            extras["enc_embeds"] = sds(
+                (batch_size, _enc_len(cfg, shape), cfg.d_model), cfg.dtype,
+                P(bspec, None, None))
+        return extras
+
+    if train:
+        opt_cfg = AdamWConfig()
+        # Microbatching: 4 gradient-accumulation steps bound activation
+        # memory (saved layer inputs scale with the microbatch, not the
+        # global batch) — standard posture at 256+ chips.
+        from repro.train.train_step import TrainConfig, make_train_step
+        accum = 4 if B // n_dp >= 4 else 1
+        if wide_dp and bspec is not None and "model" in (bspec if isinstance(bspec, tuple) else (bspec,)):
+            # fully-sharded batch: microbatch slicing would force a re-gather
+            # (and per-chip activations are already 1/256th) — no accum.
+            accum = 1
+        tcfg = TrainConfig(optimizer=opt_cfg, grad_accum=accum)
+        inner_step = make_train_step(cfg, rctx, tcfg)
+
+        def train_step(params, opt_state, batch):
+            new_params, new_state, metrics = inner_step(
+                params, {"opt": opt_state}, batch)
+            return new_params, new_state["opt"], metrics
+
+        opt_shape = _abstract(adamw_init, params_shape)
+        ospecs = shd.opt_state_specs(cfg, opt_shape, pspecs, mesh)
+        opt_in = shd.shardings_of(opt_shape, ospecs, mesh)
+        seq = _dec_len(cfg, shape)
+        batch_in = {"tokens": sds((B, seq), jnp.int32, P(bspec, None))}
+        batch_in.update(frontend_inputs(B, True))
+        return Cell(arch, shape, train_step, (params_in, opt_in, batch_in),
+                    donate=(0, 1), cfg=cfg, reps_for_roofline=reps)
+
+    enc_len = _enc_len(cfg, shape)
+    if shape.kind == "prefill":
+        seq = shape.seq_len
+
+        def prefill_step(params, tokens, cache, extras):
+            return prefill(cfg, params, tokens, cache, rctx=rctx, **extras)
+
+        dec_prompt = 1 if cfg.enc_dec else seq
+        cache_shape = _abstract(
+            partial(init_cache, cfg, B, max(dec_prompt, 1), enc_len=enc_len))
+        cspecs = shd.cache_specs(cfg, cache_shape, mesh)
+        cache_in = shd.shardings_of(cache_shape, cspecs, mesh)
+        tokens_in = sds((B, dec_prompt), jnp.int32, P(bspec, None))
+        extras = frontend_inputs(B, False)
+        return Cell(arch, shape, prefill_step,
+                    (params_in, tokens_in, cache_in, extras),
+                    donate=(2,), cfg=cfg, reps_for_roofline=reps)
+
+    # decode shapes: one new token against a cache of seq_len
+    seq = shape.seq_len
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(cfg, params, tokens, cache, pos, rctx=rctx)
+
+    # room for the new token, rounded so the seq dim stays shardable
+    max_len = (seq + 8 + 255) // 256 * 256
+    cache_shape = _abstract(
+        partial(init_cache, cfg, B, max_len, enc_len=enc_len))
+    cspecs = shd.cache_specs(cfg, cache_shape, mesh)
+    cache_in = shd.shardings_of(cache_shape, cspecs, mesh)
+    tokens_in = sds((B, 1), jnp.int32, P(bspec, None))
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(arch, shape, serve_step,
+                (params_in, cache_in, tokens_in, pos_in),
+                donate=(1,), cfg=cfg, reps_for_roofline=reps)

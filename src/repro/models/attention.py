@@ -1,0 +1,294 @@
+"""Attention in pure JAX, shaped for honest HLO cost accounting.
+
+Two execution regimes:
+
+* **blockwise_attention** — train / prefill. Flash-style online-softmax over
+  (q-tile, kv-tile) pairs: q tiles as a Python loop, kv tiles as a ``lax.scan``
+  (peak temp = one tile's working set), each q-tile checkpointed so the
+  backward recomputes attention tile-by-tile (flash-style). Causal and
+  sliding-window structure prunes kv ranges at trace time, so the FLOPs are
+  the true banded/causal FLOPs, not a masked dense S². For the roofline pass
+  ``unroll=True`` inlines the kv loop — XLA's cost analysis counts a while
+  body once, so exact accounting needs the unrolled form.
+* **decode_attention / mla_decode_attention** — single-token decode against a
+  (possibly sequence-sharded) KV cache; einsum formulation whose softmax
+  reductions GSPMD turns into small all-reduces (flash-decode semantics).
+
+GQA is computed without materializing repeated KV heads: q is grouped
+``[B, S, Hkv, G, D]`` and all einsums contract against ``[B, S, Hkv, D]``.
+
+On real TPU the Pallas kernels in ``repro.kernels`` replace these paths; the
+``ref.py`` oracles there call into this module.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(s: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+def tile_pairs(
+    n_q: int,
+    n_k: int,
+    *,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int,
+    q_offset: int,
+) -> list:
+    """Statically enumerate (i, j) tile pairs that contain any unmasked entry.
+
+    q tile i covers query positions [q_offset + i*bq, q_offset + (i+1)*bq);
+    kv tile j covers key positions [j*bk, (j+1)*bk).
+    """
+    pairs = []
+    for i in range(n_q):
+        q_lo = q_offset + i * block_q
+        q_hi = q_offset + (i + 1) * block_q - 1
+        for j in range(n_k):
+            k_lo = j * block_k
+            k_hi = (j + 1) * block_k - 1
+            if causal and k_lo > q_hi:
+                continue  # tile entirely above the diagonal
+            if window and window > 0 and k_hi < q_lo - window + 1:
+                continue  # tile entirely outside the sliding window
+            pairs.append((i, j))
+    return pairs
+
+
+def blockwise_attention(
+    q: jnp.ndarray,  # [B, Sq, Hkv, G, Dh]
+    k: jnp.ndarray,  # [B, Sk, Hkv, Dh]
+    v: jnp.ndarray,  # [B, Sk, Hkv, Dv]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # [B] or scalar; None => all
+    block_q: int = 512,
+    block_k: int = 512,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Returns [B, Sq, Hkv, G, Dv]. fp32 softmax state, MXU-dtype matmuls.
+
+    The kv-tile loop is a ``lax.scan`` (so peak temp memory is one tile's
+    working set — XLA CPU deletes ``optimization_barrier`` and otherwise keeps
+    every tile's scores live, O(S^2) temp), and each q-tile is wrapped in
+    ``jax.checkpoint`` so the backward pass recomputes attention tile-by-tile
+    (flash-attention-style recompute). ``unroll=True`` inlines the loop for
+    the roofline pass, where XLA's cost analysis must see every tile matmul
+    (while bodies are counted once).
+    """
+    B, Sq, Hkv, G, Dh = q.shape
+    _, Sk, _, Dv = v.shape
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        # Pad to block multiples; padded keys are masked out, padded query rows
+        # are sliced off. Keeps the static-tile machinery simple for odd
+        # engine-side shapes (the assigned dry-run shapes are all aligned).
+        pq = (-Sq) % block_q
+        pk = (-Sk) % block_k
+        qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        vl = kv_valid_len if kv_valid_len is not None else Sk
+        out = blockwise_attention(
+            qp, kp, vp, scale=scale, causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset, kv_valid_len=vl,
+            block_q=block_q, block_k=block_k, unroll=unroll,
+        )
+        return out[:, :Sq]
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    qt = q.reshape(B, n_q, block_q, Hkv, G, Dh)
+    kt = k.reshape(B, n_k, block_k, Hkv, Dh)
+    vt = v.reshape(B, n_k, block_k, Hkv, Dv)
+
+    def kv_ranges(i: int):
+        """Contiguous kv-tile range [lo, hi) q-tile i attends to."""
+        q_lo = q_offset + i * block_q
+        q_hi = q_offset + (i + 1) * block_q - 1
+        hi = n_k if not causal else min(n_k, q_hi // block_k + 1)
+        lo = 0
+        if window and window > 0:
+            lo = max(0, (q_lo - window + 1) // block_k)
+        return lo, hi
+
+    def _fully_visible(i: int, j: int) -> bool:
+        """Every q row of tile i sees every k of tile j (mask-free tile)."""
+        q_lo = q_offset + i * block_q
+        q_hi = q_offset + (i + 1) * block_q - 1
+        k_lo, k_hi = j * block_k, (j + 1) * block_k - 1
+        if causal and k_hi > q_lo:
+            return False
+        if window and window > 0 and k_lo < q_hi - window + 1:
+            return False
+        return True
+
+    def tile_update(carry, k_j, v_j, j, q_i, q_pos, need_mask: bool):
+        m, l, acc = carry
+        # q was pre-scaled once per q-tile; scoring here is a bare matmul.
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q_i, k_j, preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        if need_mask or kv_valid_len is not None:
+            k_pos = j * block_k + jnp.arange(block_k)
+            mask = jnp.ones((block_q, block_k), bool)
+            if need_mask and causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if need_mask and window and window > 0:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            mask_b = jnp.broadcast_to(mask, (B, 1, 1, block_q, block_k))
+            if kv_valid_len is not None:
+                vl = jnp.asarray(kv_valid_len).reshape(-1, 1, 1, 1, 1)
+                mask_b = mask_b & (k_pos[None, None, None, None, :] < vl)
+            s = jnp.where(mask_b, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l, acc
+
+    def one_q_tile(q_i, ks_i, vs_i, i: int, lo: int):
+        q_pos = q_offset + i * block_q + jnp.arange(block_q)
+        # fold the softmax scale into q once per q tile ([bq, D] elementwise)
+        # instead of into every [bq, bk] score tile.
+        q_i = (q_i.astype(jnp.float32) * scale).astype(q_i.dtype)
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, Dv), jnp.float32)
+        n_i = ks_i.shape[1]
+        # split the kv range into mask-free interior tiles (scanned) and
+        # boundary tiles (diagonal / window edge) that need position masks.
+        interior = [t for t in range(n_i) if _fully_visible(i, lo + t)]
+        boundary = [t for t in range(n_i) if t not in interior]
+        carry = (m0, l0, a0)
+        if unroll:
+            for t in interior:
+                carry = tile_update(carry, ks_i[:, t], vs_i[:, t], lo + t,
+                                    q_i, q_pos, need_mask=False)
+        elif interior:
+            # interior tiles are contiguous [min, max] by construction
+            t0, t1 = interior[0], interior[-1] + 1
+
+            def step(c, inp):
+                k_j, v_j, j = inp
+                return tile_update(c, k_j, v_j, j, q_i, q_pos,
+                                   need_mask=False), None
+            xs = (ks_i[:, t0:t1].transpose(1, 0, 2, 3, 4),
+                  vs_i[:, t0:t1].transpose(1, 0, 2, 3, 4),
+                  lo + t0 + jnp.arange(t1 - t0))
+            carry, _ = jax.lax.scan(step, carry, xs)
+        for t in boundary:
+            carry = tile_update(carry, ks_i[:, t], vs_i[:, t], lo + t,
+                                q_i, q_pos, need_mask=True)
+        m, l, acc = carry
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,Hkv,G,bq,Dv]
+        return out_i.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    out_tiles = []
+    for i in range(n_q):
+        lo, hi = kv_ranges(i)
+        fn = one_q_tile if unroll else jax.checkpoint(
+            one_q_tile, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(3, 4))
+        out_tiles.append(fn(qt[:, i], kt[:, lo:hi], vt[:, lo:hi], i, lo))
+    out = jnp.concatenate(out_tiles, axis=1) if len(out_tiles) > 1 else out_tiles[0]
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,        # [B, Hkv, G, Dh]
+    k_cache: jnp.ndarray,  # [B, S, Hkv, Dh]
+    v_cache: jnp.ndarray,  # [B, S, Hkv, Dv]
+    length: jnp.ndarray,   # scalar or [B]: number of valid cache entries
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """One-token attention read of the cache. Returns [B, Hkv, G, Dv].
+
+    Softmax reductions over the (possibly sharded) S axis lower to partial
+    reductions + tiny all-reduces under GSPMD — flash-decode by construction.
+    """
+    B, S, Hkv, Dh = k_cache.shape
+    s = jnp.einsum("bhgd,bshd->bhgs", q, k_cache, preferred_element_type=jnp.float32)
+    s = _softcap(s * scale, softcap)
+    k_pos = jnp.arange(S)
+    vl = jnp.asarray(length).reshape(-1, 1, 1, 1) if jnp.ndim(length) else length
+    mask = k_pos[None, None, None, :] < vl
+    if window and window > 0:
+        mask = mask & (k_pos[None, None, None, :] >= vl - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def mla_decode_attention(
+    q_lat: jnp.ndarray,   # [B, H, R]   (q_nope absorbed through W_UK)
+    q_rope: jnp.ndarray,  # [B, H, Dr]
+    ckv: jnp.ndarray,     # [B, S, R]   compressed KV latent cache
+    k_rope: jnp.ndarray,  # [B, S, Dr]  shared rope key cache
+    length: jnp.ndarray,
+    *,
+    scale: float,
+) -> jnp.ndarray:
+    """Weight-absorbed MLA decode. Returns latent output [B, H, R] (to be
+    expanded through W_UV by the caller)."""
+    B, S, R = ckv.shape
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, ckv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope, k_rope, preferred_element_type=jnp.float32)
+    s = s * scale
+    k_pos = jnp.arange(S)
+    vl = jnp.asarray(length).reshape(-1, 1, 1) if jnp.ndim(length) else length
+    s = jnp.where(k_pos[None, None, :] < vl, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhs,bsr->bhr", p.astype(ckv.dtype), ckv, preferred_element_type=jnp.float32)
+    return out.astype(q_lat.dtype)
+
+
+def update_kv_cache(
+    cache: jnp.ndarray,  # [B, S, ...]
+    new: jnp.ndarray,    # [B, n, ...]
+    pos,                 # scalar int: uniform write offset
+) -> jnp.ndarray:
+    """Uniform-position cache write (dry-run / lockstep decode fast path)."""
+    idx = (0, pos) + (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), idx)
+
+
+def update_kv_cache_ragged(
+    cache: jnp.ndarray,  # [B, S, ...]
+    new: jnp.ndarray,    # [B, n, ...]
+    lengths: jnp.ndarray,  # [B] per-request write offsets
+) -> jnp.ndarray:
+    """Per-request-position write (continuous-batching engine path)."""
+    def write_one(c, x, p):
+        return jax.lax.dynamic_update_slice(c, x.astype(c.dtype), (p,) + (0,) * (c.ndim - 1))
+    return jax.vmap(write_one)(cache, new, lengths)

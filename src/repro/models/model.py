@@ -1,0 +1,678 @@
+"""Composable decoder-only / encoder-decoder LM covering all assigned archs.
+
+Design:
+
+* Params are plain nested dicts (no flax). A model is a list of *stacks*; each
+  stack is a repeating *period* of (sequence-mixer, channel-mixer) slots whose
+  parameters are stacked along a leading ``reps`` axis and driven by
+  ``lax.scan`` — compact HLO even for 72-layer models. A dense prefix (e.g.
+  DeepSeek-v3's first-3-dense) is simply a second stack.
+* Four execution modes share one block implementation:
+  ``train`` (no cache), ``prefill`` (build cache, static offset 0, exact tile
+  pruning), ``chunk`` (chunked prefill against an existing cache at a traced
+  offset — the serving engine's path), ``decode`` (single token).
+* Caches are pytrees mirroring the stack structure, leaves ``[reps, B, ...]``
+  so they scan together with the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ATTN, DENSE, LOCAL_ATTN, MAMBA, MLA, MLSTM, MOE, NONE, SLSTM, ModelConfig,
+)
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import dense_init, embed_init, init_mlp, mlp, rms_norm, softcap, split
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Per-call runtime context (distribution + numerics knobs)."""
+
+    moe: M.MoEContext = dataclasses.field(default_factory=M.MoEContext)
+    remat: str = "none"          # none | dots | full
+    block_q: int = 512
+    block_k: int = 512
+    mlstm_block: int = 256
+    # beyond-paper perf knobs (hillclimbed; see EXPERIMENTS.md §Perf)
+    loss_vocab_blocks: int = 8
+    window_cache: bool = False   # rolling-buffer cache for LOCAL_ATTN layers
+    # roofline accounting: XLA's cost analysis counts a while-loop body once,
+    # so the dry-run's roofline pass lowers with layer scans unrolled.
+    unroll_layers: bool = False
+
+
+# =============================================================================
+# stack structure
+# =============================================================================
+def build_stacks(cfg: ModelConfig) -> list:
+    """Returns [(period_kinds, reps)] covering cfg.num_layers decoder layers."""
+    stacks = []
+    if cfg.first_k_dense:
+        mixer0 = cfg.layer_pattern[0]
+        stacks.append((((mixer0, DENSE),), cfg.first_k_dense))
+    period = tuple(
+        (cfg.layer_pattern[i % len(cfg.layer_pattern)],
+         cfg.ffn_pattern[i % len(cfg.ffn_pattern)])
+        for i in range(cfg.period)
+    )
+    stacks.append((period, cfg.num_pattern_reps))
+    return stacks
+
+
+def _moe_pad(cfg: ModelConfig) -> int:
+    return M.pad_experts(cfg.num_experts, 16)
+
+
+# =============================================================================
+# init
+# =============================================================================
+def _init_attn_slot(cfg: ModelConfig, key) -> Params:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = split(key, 4)
+    p = {
+        "ln": jnp.zeros((d,), cfg.param_dtype),
+        "wq": dense_init(ks[0], d, H * Dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, Hkv * Dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, Hkv * Dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], H * Dh, d, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.zeros((Dh,), cfg.param_dtype)
+    if cfg.post_norm:
+        p["post_ln"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def _init_mla_slot(cfg: ModelConfig, key) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = split(key, 5)
+    return {
+        "ln": jnp.zeros((d,), cfg.param_dtype),
+        "wq_a": dense_init(ks[0], d, qr, cfg.param_dtype),
+        "q_ln": jnp.zeros((qr,), cfg.param_dtype),
+        "wq_b": dense_init(ks[1], qr, H * (dn + dr), cfg.param_dtype),
+        "wkv_a": dense_init(ks[2], d, kvr + dr, cfg.param_dtype),
+        "kv_ln": jnp.zeros((kvr,), cfg.param_dtype),
+        "wkv_b": dense_init(ks[3], kvr, H * (dn + dv), cfg.param_dtype),
+        "wo": dense_init(ks[4], H * dv, d, cfg.param_dtype),
+    }
+
+
+def _init_cross_slot(cfg: ModelConfig, key) -> Params:
+    p = _init_attn_slot(cfg, key)
+    p.pop("q_norm", None), p.pop("k_norm", None)
+    return p
+
+
+def _init_slot(cfg: ModelConfig, mixer: str, ffn: str, key, decoder_cross: bool) -> Params:
+    d = cfg.d_model
+    k_mix, k_ffn, k_cross = split(key, 3)
+    slot: Params = {}
+    if mixer in (ATTN, LOCAL_ATTN):
+        slot["attn"] = _init_attn_slot(cfg, k_mix)
+    elif mixer == MLA:
+        slot["mla"] = _init_mla_slot(cfg, k_mix)
+    elif mixer == MAMBA:
+        slot["mamba"] = {
+            "ln": jnp.zeros((d,), cfg.param_dtype),
+            **S.init_mamba(k_mix, d, cfg.mamba_expand * d, cfg.mamba_d_state,
+                           cfg.mamba_d_conv, cfg.param_dtype),
+        }
+    elif mixer == MLSTM:
+        slot["mlstm"] = {"ln": jnp.zeros((d,), cfg.param_dtype),
+                         **S.init_mlstm(k_mix, d, cfg.num_heads, cfg.param_dtype)}
+    elif mixer == SLSTM:
+        slot["slstm"] = {"ln": jnp.zeros((d,), cfg.param_dtype),
+                         **S.init_slstm(k_mix, d, cfg.num_heads, cfg.param_dtype)}
+    else:
+        raise ValueError(mixer)
+    if decoder_cross:
+        slot["cross"] = _init_cross_slot(cfg, k_cross)
+    if ffn == DENSE:
+        slot["ffn"] = {"ln": jnp.zeros((d,), cfg.param_dtype),
+                       **init_mlp(k_ffn, d, cfg.d_ff, cfg.param_dtype)}
+        if cfg.post_norm:
+            slot["ffn"]["post_ln"] = jnp.zeros((d,), cfg.param_dtype)
+    elif ffn == MOE:
+        slot["moe"] = {
+            "ln": jnp.zeros((d,), cfg.param_dtype),
+            **M.init_moe(k_ffn, d, cfg.moe_d_ff, cfg.num_experts, _moe_pad(cfg),
+                         cfg.shared_expert_d_ff, cfg.param_dtype,
+                         aux_free=cfg.router_aux_free),
+        }
+    elif ffn == NONE:
+        pass
+    else:
+        raise ValueError(ffn)
+    return slot
+
+
+def _init_stack(cfg: ModelConfig, period, reps: int, key, decoder_cross: bool) -> Params:
+    """Stacked slot params: leaves [reps, ...]."""
+    def one_rep(k):
+        ks = split(k, len(period))
+        return [ _init_slot(cfg, mixer, ffn, ks[i], decoder_cross)
+                 for i, (mixer, ffn) in enumerate(period) ]
+    reps_keys = split(key, reps)
+    per_rep = [one_rep(k) for k in reps_keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = split(key, 6)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "stacks": [
+            _init_stack(cfg, period, reps, k, decoder_cross=cfg.enc_dec)
+            for (period, reps), k in zip(build_stacks(cfg), split(ks[1], len(build_stacks(cfg))))
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, cfg.param_dtype)
+    if cfg.enc_dec:
+        n_enc = cfg.num_encoder_layers
+        params["encoder"] = {
+            "stacks": [_init_stack(cfg, ((ATTN, DENSE),), n_enc, ks[3], decoder_cross=False)],
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        }
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": dense_init(ks[4], 2 * cfg.d_model, cfg.d_model, cfg.param_dtype),
+            "block": _init_stack(cfg, ((cfg.layer_pattern[0], DENSE),), 1, ks[5], False),
+            "ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        }
+    return params
+
+
+# =============================================================================
+# cache
+# =============================================================================
+def _slot_cache(cfg: ModelConfig, mixer: str, B: int, Smax: int, dtype,
+                decoder_cross: bool, enc_len: int) -> Params:
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    d = cfg.d_model
+    c: Params = {}
+    if mixer in (ATTN, LOCAL_ATTN):
+        c["k"] = jnp.zeros((B, Smax, Hkv, Dh), dtype)
+        c["v"] = jnp.zeros((B, Smax, Hkv, Dh), dtype)
+    elif mixer == MLA:
+        c["ckv"] = jnp.zeros((B, Smax, cfg.kv_lora_rank), dtype)
+        c["kr"] = jnp.zeros((B, Smax, cfg.qk_rope_head_dim), dtype)
+    elif mixer == MAMBA:
+        c["mamba"] = S.init_mamba_state(B, cfg.mamba_expand * d,
+                                        cfg.mamba_d_state, cfg.mamba_d_conv, dtype)
+    elif mixer == MLSTM:
+        c["mlstm"] = S.init_mlstm_state(B, d, cfg.num_heads, dtype)
+    elif mixer == SLSTM:
+        c["slstm"] = S.init_slstm_state(B, d, cfg.num_heads, dtype)
+    if decoder_cross:
+        c["cross_k"] = jnp.zeros((B, enc_len, Hkv, Dh), dtype)
+        c["cross_v"] = jnp.zeros((B, enc_len, Hkv, Dh), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=None, enc_len: int = 0) -> Params:
+    dtype = dtype or cfg.dtype
+    out = []
+    for period, reps in build_stacks(cfg):
+        def one_rep():
+            return [_slot_cache(cfg, mixer, B, max_len, dtype, cfg.enc_dec, enc_len)
+                    for mixer, _ in period]
+        per_rep = [one_rep() for _ in range(reps)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    return out
+
+
+# =============================================================================
+# blocks
+# =============================================================================
+def _norm(x, w, eps):
+    return rms_norm(x, w, eps)
+
+
+def _maybe_post(cfg, p, y):
+    return _norm(y, p["post_ln"], cfg.norm_eps) if cfg.post_norm and "post_ln" in p else y
+
+
+def _qkv(cfg: ModelConfig, p, x, positions):
+    B, Sq, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, Sq, H, Dh)
+    k = (x @ p["wk"]).reshape(B, Sq, Hkv, Dh)
+    v = (x @ p["wv"]).reshape(B, Sq, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q.reshape(B, Sq, Hkv, H // Hkv, Dh), k, v
+
+
+def _attn_scale(cfg: ModelConfig) -> float:
+    return cfg.attn_scale or 1.0 / math.sqrt(cfg.resolved_head_dim)
+
+
+def _positions(mode, pos, lengths, Sq):
+    if mode == "decode" and lengths is not None and jnp.ndim(lengths):
+        return (jnp.asarray(lengths) - 1)[:, None]          # [B, 1] per-request
+    return (pos + jnp.arange(Sq))[None, :]                  # [1, Sq] lockstep
+
+
+def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window):
+    """Returns (y, new_state)."""
+    B, Sq, _ = x.shape
+    xin = _norm(x, p["ln"], cfg.norm_eps)
+    positions = _positions(mode, pos, lengths, Sq)
+    q, k, v = _qkv(cfg, p, xin, positions)
+    scale = _attn_scale(cfg)
+    new_state = state
+    if mode in ("train", "encode"):
+        o = A.blockwise_attention(q, k, v, scale=scale, causal=(mode == "train"),
+                                  window=window if mode == "train" else 0,
+                                  softcap=cfg.attn_logit_softcap,
+                                  block_q=rctx.block_q, block_k=rctx.block_k,
+                                  unroll=rctx.unroll_layers)
+    elif mode == "prefill":
+        o = A.blockwise_attention(q, k, v, scale=scale, causal=True, window=window,
+                                  softcap=cfg.attn_logit_softcap,
+                                  block_q=rctx.block_q, block_k=rctx.block_k,
+                                  unroll=rctx.unroll_layers)
+        new_state = dict(state,
+                         k=A.update_kv_cache(state["k"], k, 0),
+                         v=A.update_kv_cache(state["v"], v, 0))
+    elif mode == "chunk":
+        k_all = A.update_kv_cache(state["k"], k, pos)
+        v_all = A.update_kv_cache(state["v"], v, pos)
+        new_state = dict(state, k=k_all, v=v_all)
+        o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
+    elif mode == "decode":
+        if jnp.ndim(lengths):
+            k_all = A.update_kv_cache_ragged(state["k"], k, lengths - 1)
+            v_all = A.update_kv_cache_ragged(state["v"], v, lengths - 1)
+        else:
+            k_all = A.update_kv_cache(state["k"], k, pos)
+            v_all = A.update_kv_cache(state["v"], v, pos)
+        new_state = dict(state, k=k_all, v=v_all)
+        o = A.decode_attention(q[:, 0], k_all, v_all, lengths, scale=scale,
+                               window=window, softcap=cfg.attn_logit_softcap)[:, None]
+    else:
+        raise ValueError(mode)
+    o = o.reshape(B, Sq, cfg.num_heads * cfg.resolved_head_dim)
+    y = o @ p["wo"]
+    return _maybe_post(cfg, p, y), new_state
+
+
+def _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window, scale=None):
+    """Chunk of queries at traced offset ``pos`` over the full cache buffer.
+
+    Causality is enforced by masking against traced positions; no static tile
+    pruning (the engine buckets the cache length instead).
+    """
+    B, Sq = q.shape[0], q.shape[1]
+    vl = lengths if lengths is not None else pos + Sq
+    # q_offset enters only through position masks -> fold into kv_valid mask:
+    # row t may see keys < pos + t + 1. Implement via per-row valid length.
+    # blockwise_attention supports causal masking with integer q_offset only,
+    # so use a non-causal call with explicit row-wise masking in one pass.
+    scale = scale if scale is not None else _attn_scale(cfg)
+    Hkv, G = q.shape[2], q.shape[3]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_all, preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cfg.attn_logit_softcap) if cfg.attn_logit_softcap else s
+    Sk = k_all.shape[1]
+    k_pos = jnp.arange(Sk)
+    q_pos = pos + jnp.arange(Sq)
+    mask = (k_pos[None, :] <= q_pos[:, None])[None]          # [1, Sq, Sk]
+    if window and window > 0:
+        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)[None]
+    if lengths is not None and jnp.ndim(lengths):
+        mask = mask & (k_pos[None, None, :] < jnp.asarray(lengths).reshape(-1, 1, 1))
+    mask = mask[:, None, None]                               # [B|1, 1, 1, Sq, Sk]
+    s = jnp.where(mask, s, A.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_all.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
+
+
+def mla_block(cfg, rctx, p, x, state, *, mode, pos, lengths):
+    B, Sq, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, kvr = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                       cfg.v_head_dim, cfg.kv_lora_rank)
+    from repro.models.layers import apply_rope
+    xin = _norm(x, p["ln"], cfg.norm_eps)
+    positions = _positions(mode, pos, lengths, Sq)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    qf = rms_norm(xin @ p["wq_a"], p["q_ln"], cfg.norm_eps) @ p["wq_b"]
+    qf = qf.reshape(B, Sq, H, dn + dr)
+    q_nope, q_rope = qf[..., :dn], qf[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = xin @ p["wkv_a"]
+    ckv = rms_norm(kv[..., :kvr], p["kv_ln"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., kvr:][:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    wkv_b = p["wkv_b"].reshape(kvr, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    new_state = state
+
+    if mode in ("train", "prefill"):
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv, w_uk)
+        v = jnp.einsum("bsr,rhd->bshd", ckv, w_uv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, Sq, H, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # G=1
+        o = A.blockwise_attention(q, k, v, scale=scale, causal=True,
+                                  block_q=rctx.block_q, block_k=rctx.block_k,
+                                  unroll=rctx.unroll_layers)
+        o = o.reshape(B, Sq, H * dv)
+        if mode == "prefill":
+            new_state = dict(state,
+                             ckv=A.update_kv_cache(state["ckv"], ckv, 0),
+                             kr=A.update_kv_cache(state["kr"], k_rope, 0))
+    elif mode == "decode":
+        if jnp.ndim(lengths):
+            ckv_all = A.update_kv_cache_ragged(state["ckv"], ckv, lengths - 1)
+            kr_all = A.update_kv_cache_ragged(state["kr"], k_rope, lengths - 1)
+        else:
+            ckv_all = A.update_kv_cache(state["ckv"], ckv, pos)
+            kr_all = A.update_kv_cache(state["kr"], k_rope, pos)
+        new_state = dict(state, ckv=ckv_all, kr=kr_all)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+        o_lat = A.mla_decode_attention(q_lat, q_rope[:, 0], ckv_all, kr_all,
+                                       lengths, scale=scale)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv).reshape(B, 1, H * dv)
+    elif mode == "chunk":
+        ckv_all = A.update_kv_cache(state["ckv"], ckv, pos)
+        kr_all = A.update_kv_cache(state["kr"], k_rope, pos)
+        new_state = dict(state, ckv=ckv_all, kr=kr_all)
+        k_nope = jnp.einsum("bsr,rhd->bshd", ckv_all, w_uk)
+        v_all = jnp.einsum("bsr,rhd->bshd", ckv_all, w_uv)
+        Sk = ckv_all.shape[1]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None], (B, Sk, H, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]
+        o = _chunk_attend(cfg, rctx, q, k_full, v_all, pos, lengths, 0, scale=scale)
+        o = o.reshape(B, Sq, H * dv)
+    else:
+        raise ValueError(mode)
+    return o @ p["wo"], new_state
+
+
+def cross_block(cfg, rctx, p, x, enc_out, state, *, mode):
+    """Encoder-decoder cross attention; kv cached at prefill."""
+    B, Sq, _ = x.shape
+    xin = _norm(x, p["ln"], cfg.norm_eps)
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (xin @ p["wq"]).reshape(B, Sq, Hkv, H // Hkv, Dh)
+    if mode in ("train", "prefill"):
+        k = (enc_out @ p["wk"]).reshape(B, -1, Hkv, Dh)
+        v = (enc_out @ p["wv"]).reshape(B, -1, Hkv, Dh)
+        new_state = state if mode == "train" else dict(state, cross_k=k.astype(state["cross_k"].dtype),
+                                                       cross_v=v.astype(state["cross_v"].dtype))
+    else:
+        k, v, new_state = state["cross_k"], state["cross_v"], state
+    o = A.blockwise_attention(q, k, v, scale=_attn_scale(cfg), causal=False,
+                              block_q=rctx.block_q, block_k=rctx.block_k,
+                                  unroll=rctx.unroll_layers)
+    return o.reshape(B, Sq, H * Dh) @ p["wo"], new_state
+
+
+def _ffn_apply(cfg, rctx, slot, x):
+    """Channel mixer. Returns (y, aux)."""
+    if "ffn" in slot:
+        y = mlp(slot["ffn"], _norm(x, slot["ffn"]["ln"], cfg.norm_eps), cfg.activation)
+        return _maybe_post(cfg, slot["ffn"], y), jnp.zeros((), jnp.float32)
+    if "moe" in slot:
+        y, aux = M.moe_ffn(slot["moe"], _norm(x, slot["moe"]["ln"], cfg.norm_eps),
+                           num_real=cfg.num_experts, top_k=cfg.num_experts_per_tok,
+                           activation=cfg.activation, aux_free=cfg.router_aux_free,
+                           ctx=rctx.moe)
+        return y, aux
+    return None, jnp.zeros((), jnp.float32)
+
+
+def apply_slot(cfg, rctx, slot, kinds, x, state, enc_out, *, mode, pos, lengths):
+    mixer, ffn = kinds
+    if mixer in (ATTN, LOCAL_ATTN):
+        window = cfg.sliding_window if mixer == LOCAL_ATTN else 0
+        y, new_state = attn_block(cfg, rctx, slot["attn"], x, state,
+                                  mode=mode, pos=pos, lengths=lengths, window=window)
+    elif mixer == MLA:
+        y, new_state = mla_block(cfg, rctx, slot["mla"], x, state,
+                                 mode=mode, pos=pos, lengths=lengths)
+    elif mixer == MAMBA:
+        p = slot["mamba"]
+        st = None if mode == "train" else state["mamba"]
+        y, new_mamba = S.mamba_mix({k: v for k, v in p.items() if k != "ln"},
+                                   _norm(x, p["ln"], cfg.norm_eps), st)
+        new_state = state if mode == "train" else dict(state, mamba=new_mamba)
+    elif mixer == MLSTM:
+        p = slot["mlstm"]
+        st = None if mode == "train" else state["mlstm"]
+        y, new_m = S.mlstm_mix({k: v for k, v in p.items() if k != "ln"},
+                               _norm(x, p["ln"], cfg.norm_eps), st, cfg.num_heads,
+                               block=min(rctx.mlstm_block, x.shape[1]))
+        new_state = state if mode == "train" else dict(state, mlstm=new_m)
+    elif mixer == SLSTM:
+        p = slot["slstm"]
+        st = None if mode == "train" else state["slstm"]
+        y, new_s = S.slstm_mix({k: v for k, v in p.items() if k != "ln"},
+                               _norm(x, p["ln"], cfg.norm_eps), st, cfg.num_heads)
+        new_state = state if mode == "train" else dict(state, slstm=new_s)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if "cross" in slot and (enc_out is not None or mode in ("decode", "chunk")):
+        yc, new_state2 = cross_block(cfg, rctx, slot["cross"], x, enc_out,
+                                     new_state, mode=mode)
+        x = x + yc
+        if mode != "train":
+            new_state = new_state2
+    y_ffn, aux = _ffn_apply(cfg, rctx, slot, x)
+    if y_ffn is not None:
+        x = x + y_ffn
+    return x, new_state, aux
+
+
+def _remat_wrap(rctx, fn):
+    if rctx.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if rctx.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply_stack(cfg, rctx, stack_params, period, x, cache, enc_out, *,
+                mode, pos, lengths):
+    """Scan the stack. cache may be None (train). Returns (x, new_cache, aux)."""
+    has_cache = cache is not None
+
+    def body(carry, per_rep):
+        x, aux = carry
+        if has_cache:
+            p_rep, c_rep = per_rep
+        else:
+            p_rep, c_rep = per_rep, [None] * len(period)
+        new_c = []
+        for i, kinds in enumerate(period):
+            x, st, a = apply_slot(cfg, rctx, p_rep[i], kinds, x, c_rep[i],
+                                  enc_out, mode=mode, pos=pos, lengths=lengths)
+            new_c.append(st)
+            aux = aux + a
+        return (x, aux), (new_c if has_cache else None)
+
+    body = _remat_wrap(rctx, body)
+    xs = (stack_params, cache) if has_cache else stack_params
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=True if rctx.unroll_layers else 1)
+    return x, new_cache, aux
+
+
+# =============================================================================
+# top level
+# =============================================================================
+def _embed(cfg, params, tokens, extra_embeds=None):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if extra_embeds is not None and cfg.num_patch_tokens:
+        P = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    return x
+
+
+def _head(cfg, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ w
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def _run_encoder(cfg, rctx, params, enc_embeds):
+    enc = params["encoder"]
+    x = enc_embeds
+    x, _, _ = apply_stack(cfg, rctx, enc["stacks"][0], ((ATTN, DENSE),), x, None,
+                          None, mode="encode", pos=0, lengths=None)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, rctx: RunCtx,
+            cache=None, mode: str = "train", pos=0, lengths=None,
+            extra_embeds=None, enc_embeds=None):
+    """Unified forward. Returns (hidden [B,S,d], new_cache, aux, enc_out)."""
+    enc_out = None
+    if cfg.enc_dec:
+        if enc_embeds is not None:
+            enc_out = _run_encoder(cfg, rctx, params, enc_embeds)
+    x = _embed(cfg, params, tokens, extra_embeds)
+    new_stacks = []
+    aux_total = jnp.zeros((), jnp.float32)
+    stacks = build_stacks(cfg)
+    for i, (period, reps) in enumerate(stacks):
+        c = cache[i] if cache is not None else None
+        x, new_c, aux = apply_stack(cfg, rctx, params["stacks"][i], period, x, c,
+                                    enc_out, mode=mode, pos=pos, lengths=lengths)
+        new_stacks.append(new_c)
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (new_stacks if cache is not None else None), aux_total, enc_out
+
+
+# ---- user-facing steps ------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, rctx: RunCtx):
+    """Next-token CE loss (+ MoE aux + optional MTP). batch: tokens [B,S] (+
+    extra_embeds / enc_embeds)."""
+    tokens = batch["tokens"]
+    x, _, aux, _ = forward(cfg, params, tokens, rctx=rctx, mode="train",
+                           extra_embeds=batch.get("extra_embeds"),
+                           enc_embeds=batch.get("enc_embeds"))
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    loss = _blocked_ce(cfg, params, x, labels, mask, rctx)
+    if cfg.mtp_depth and "mtp" in params:
+        loss = loss + 0.3 * _mtp_loss(cfg, params, x, tokens, rctx)
+    return loss + 0.01 * aux
+
+
+def _blocked_ce(cfg, params, x, labels, mask, rctx):
+    """Cross-entropy without materializing [B,S,V] in fp32 all at once."""
+    B, S, _ = x.shape
+    nb = min(rctx.loss_vocab_blocks, S)
+    while S % nb:
+        nb -= 1
+    xs = x.reshape(B, nb, S // nb, -1)
+    ls = labels.reshape(B, nb, S // nb)
+    ms = mask.reshape(B, nb, S // nb)
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    @jax.checkpoint  # recompute block logits in bwd: never hold [B,S,V] fp32
+    def block_ce(xb, lb, mb, w):
+        logits = softcap(xb @ w, cfg.final_logit_softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mb)
+
+    total = jnp.zeros((), jnp.float32)
+    for i in range(nb):
+        total = total + block_ce(xs[:, i], ls[:, i], ms[:, i], head_w)
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _mtp_loss(cfg, params, hidden, tokens, rctx):
+    """DeepSeek-v3 multi-token prediction: one extra depth predicting t+2."""
+    mtp = params["mtp"]
+    emb_next = _embed(cfg, params, jnp.roll(tokens, -1, axis=1))
+    h = jnp.concatenate([rms_norm(hidden, mtp["ln"], cfg.norm_eps), emb_next], -1) @ mtp["proj"]
+    period = ((cfg.layer_pattern[0], DENSE),)
+    h, _, _ = apply_stack(cfg, rctx, mtp["block"], period, h, None, None,
+                          mode="train", pos=0, lengths=None)
+    labels2 = jnp.roll(tokens, -2, axis=1)
+    mask = jnp.ones_like(labels2, jnp.float32).at[:, -2:].set(0.0)
+    return _blocked_ce(cfg, params, h, labels2, mask, rctx)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache, *, rctx: RunCtx,
+            extra_embeds=None, enc_embeds=None):
+    """Full prefill from empty cache. Returns (last_logits [B,V], cache)."""
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="prefill", pos=0,
+                                 lengths=None, extra_embeds=extra_embeds,
+                                 enc_embeds=enc_embeds)
+    return _head(cfg, params, x[:, -1]), new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache, pos, *,
+                rctx: RunCtx, lengths=None):
+    """One decode step. tokens [B,1]; pos scalar (lockstep) or lengths [B]."""
+    if lengths is None:
+        lengths = pos + 1
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="decode", pos=pos, lengths=lengths)
+    return _head(cfg, params, x[:, -1]), new_cache
+
+
+def chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache, pos, *,
+                       rctx: RunCtx, lengths=None, extra_embeds=None,
+                       logits_at=-1):
+    """Chunked-prefill step at traced offset ``pos`` (serving engine path).
+
+    ``logits_at``: chunk position whose logits to return (bucket-padded
+    chunks must point at the last *real* token, not the padding)."""
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="chunk", pos=pos, lengths=lengths,
+                                 extra_embeds=extra_embeds)
+    if isinstance(logits_at, int) and logits_at == -1:
+        sel = x[:, -1]
+    else:
+        sel = jnp.take_along_axis(
+            x, jnp.asarray(logits_at).reshape(-1, 1, 1), axis=1)[:, 0]
+    return _head(cfg, params, sel), new_cache
+
+
+def build_model(cfg: ModelConfig, rctx: Optional[RunCtx] = None):
+    """Convenience bundle of partially-applied step functions."""
+    rctx = rctx or RunCtx()
+    return {
+        "init_params": partial(init_params, cfg),
+        "init_cache": partial(init_cache, cfg),
+        "loss_fn": partial(loss_fn, cfg, rctx=rctx),
+        "prefill": partial(prefill, cfg, rctx=rctx),
+        "decode_step": partial(decode_step, cfg, rctx=rctx),
+        "chunk_prefill_step": partial(chunk_prefill_step, cfg, rctx=rctx),
+    }

@@ -1,0 +1,287 @@
+"""Mixture-of-Experts channel mixer.
+
+Two implementations selected by ``MoEContext.impl``:
+
+* ``dense`` — every expert on every token, masked combine. Exact, used by CPU
+  smoke tests and tiny configs only (FLOPs scale with total experts).
+* ``ep`` — expert parallelism via ``shard_map``: tokens are sequence-sharded
+  over the model axis, dispatched into per-expert capacity buffers with the
+  Switch-style cumsum trick (one-hot is only [T_local, E]), exchanged with
+  ``all_to_all`` over the model axis, run through the local expert shards, and
+  combined. Compiled FLOPs ≈ active-expert FLOPs × capacity factor — this is
+  what makes the MoE roofline honest (a masked-dense MoE would inflate the
+  compute term by E/top_k).
+
+Routing follows the arch: softmax top-k (Jamba/Qwen) or DeepSeek-v3
+aux-loss-free sigmoid routing with a correction bias that is updated outside
+the gradient path (``update_router_bias``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.models.layers import act_fn, dense_init, split
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEContext:
+    """Runtime distribution context for the MoE block."""
+
+    impl: str = "dense"                      # "dense" | "ep"
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()            # e.g. ("pod", "data") or ("data",)
+    tp_axis: str = "model"
+    capacity_factor: float = 1.25
+
+
+def pad_experts(num_experts: int, multiple: int = 16) -> int:
+    return (num_experts + multiple - 1) // multiple * multiple
+
+
+def init_moe(key, d_model: int, moe_d_ff: int, num_experts: int,
+             num_experts_padded: int, shared_d_ff: int, dtype,
+             aux_free: bool = False):
+    ks = split(key, 5)
+    E = num_experts_padded
+    scale = 1.0 / math.sqrt(d_model)
+    params = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, moe_d_ff), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, moe_d_ff), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, moe_d_ff, d_model), jnp.float32)
+                   / math.sqrt(moe_d_ff)).astype(dtype),
+    }
+    if aux_free:
+        params["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if shared_d_ff:
+        k1, k2, k3 = split(ks[4], 3)
+        params["shared"] = {
+            "wi_gate": dense_init(k1, d_model, shared_d_ff, dtype),
+            "wi_up": dense_init(k2, d_model, shared_d_ff, dtype),
+            "wo": dense_init(k3, shared_d_ff, d_model, dtype),
+        }
+    return params
+
+
+def _route(params, t: jnp.ndarray, num_real: int, top_k: int, aux_free: bool):
+    """t: [T, d]. Returns (ids [T,K], weights [T,K] fp32, aux_loss scalar)."""
+    E = params["router"].shape[1]
+    logits = (t.astype(jnp.float32) @ params["router"])  # [T, E]
+    if E > num_real:
+        pad_mask = jnp.arange(E) >= num_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    if aux_free:
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        sel = jnp.where(jnp.arange(E)[None, :] >= num_real, -1e30, sel) if E > num_real else sel
+        _, ids = jax.lax.top_k(sel, top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, ids = jax.lax.top_k(probs, top_k)
+        w = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+        # Switch-style load balance loss on the real experts.
+        me = jnp.mean(probs[:, :num_real], axis=0)
+        onehot = jax.nn.one_hot(ids[:, 0], E)[:, :num_real]
+        ce = jnp.mean(onehot, axis=0)
+        aux = num_real * jnp.sum(me * ce)
+    return ids, w, aux
+
+
+def _expert_ffn(x, w_gate, w_up, w_down, activation: str):
+    """x: [E, C, d]; weights [E, d, f]/[E, f, d]."""
+    g = act_fn(activation)(jnp.einsum("ecd,edf->ecf", x, w_gate))
+    h = g * jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn_dense(params, x: jnp.ndarray, num_real: int, top_k: int,
+                  activation: str, aux_free: bool):
+    """Masked-dense MoE: all experts on all tokens. [B,S,d] -> ([B,S,d], aux)."""
+    B, S, d = x.shape
+    E = params["w_gate"].shape[0]
+    t = x.reshape(-1, d)
+    ids, w, aux = _route(params, t, num_real, top_k, aux_free)
+    gates = jnp.zeros((t.shape[0], E), jnp.float32)
+    gates = gates.at[jnp.arange(t.shape[0])[:, None], ids].set(w)
+    h = _expert_ffn(
+        jnp.broadcast_to(t[None], (E,) + t.shape).astype(x.dtype),
+        params["w_gate"], params["w_up"], params["w_down"], activation,
+    )  # [E, T, d]
+    y = jnp.einsum("etd,te->td", h.astype(jnp.float32), gates)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _dispatch_local(t, ids, w, E: int, cap: int):
+    """Token->expert capacity dispatch on one shard.
+
+    t: [T, d]; ids/w: [T, K]. Returns (buf [E, cap, d], meta for combine).
+    """
+    T, K = ids.shape
+    flat_ids = ids.reshape(-1)                        # [T*K]
+    oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # [T*K, E]
+    pos_all = jnp.cumsum(oh, axis=0) - 1              # position within expert
+    pos = jnp.take_along_axis(pos_all, flat_ids[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, cap)              # cap -> dropped by 'drop'
+    t_rep = jnp.repeat(t, K, axis=0)                  # [T*K, d]
+    buf = jnp.zeros((E, cap + 1, t.shape[1]), t.dtype)
+    buf = buf.at[flat_ids, safe_pos].set(t_rep, mode="drop")[:, :cap]
+    return buf, (flat_ids, safe_pos, keep)
+
+
+def _combine_local(buf_out, meta, w, T: int, K: int):
+    flat_ids, safe_pos, keep = meta
+    gathered = buf_out[flat_ids, jnp.minimum(safe_pos, buf_out.shape[1] - 1)]  # [T*K, d]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    wf = w.reshape(-1)[:, None].astype(gathered.dtype)
+    y = (gathered * wf).reshape(T, K, -1).sum(axis=1)
+    return y
+
+
+def moe_ffn_ep(params, x: jnp.ndarray, num_real: int, top_k: int,
+               activation: str, aux_free: bool, ctx: MoEContext):
+    """Expert-parallel MoE via shard_map. x: [B, S, d] sharded (dp, tp, -)."""
+    mesh = ctx.mesh
+    E = params["w_gate"].shape[0]
+    tp = ctx.tp_axis
+    M = mesh.shape[tp]
+    assert E % M == 0, f"experts {E} not divisible by model axis {M}"
+    dp = ctx.dp_axes
+
+    if x.shape[1] % M != 0:
+        # decode path: sequences too short to sequence-shard over the model
+        # axis -> replicated-dispatch EP (tokens replicated across the model
+        # axis, each rank runs its expert shard densely, psum combines).
+        # Token counts are tiny at decode so duplicated routing is free and
+        # no all_to_all is needed.
+        return _moe_ep_replicated(params, x, num_real, top_k, activation,
+                                  aux_free, ctx)
+
+    x_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), tp, None)
+    router_spec = P(None, None)
+    ew_spec = P(tp, None, None)
+    bias_spec = P(None)
+
+    def ep_body(x_loc, router_w, router_bias, w_gate, w_up, w_down):
+        Bl, Sl, d = x_loc.shape
+        t = x_loc.reshape(-1, d)
+        T = t.shape[0]
+        local_params = {"router": router_w}
+        if router_bias is not None:
+            local_params["router_bias"] = router_bias
+        ids, w, aux = _route(local_params, t, num_real, top_k, aux_free)
+        cap = max(8, int(math.ceil(T * top_k * ctx.capacity_factor / E / 8)) * 8)
+        buf, meta = _dispatch_local(t, ids, w, E, cap)           # [E, cap, d]
+        El = E // M
+        # exchange: [E, cap, d] -> per-device experts gathered from all peers
+        buf4 = buf.reshape(M, El, cap, d)
+        recv = jax.lax.all_to_all(buf4, tp, split_axis=0, concat_axis=0, tiled=False)
+        xin = recv.transpose(1, 0, 2, 3).reshape(El, M * cap, d)  # [El, M*cap, d]
+        h = _expert_ffn(xin, w_gate, w_up, w_down, activation)
+        back = h.reshape(El, M, cap, d).transpose(1, 0, 2, 3)     # [M, El, cap, d]
+        buf_out = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0, tiled=False)
+        buf_out = buf_out.reshape(E, cap, d)
+        y = _combine_local(buf_out, meta, w, T, top_k)
+        axes = tuple(dp) + (tp,)
+        aux = jax.lax.pmean(aux, axes)
+        return y.reshape(Bl, Sl, d), aux
+
+    rb = params.get("router_bias")
+    fn = shard_map(
+        ep_body, mesh=mesh,
+        in_specs=(x_spec, router_spec, bias_spec if rb is not None else P(), ew_spec, ew_spec, ew_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    y, aux = fn(x, params["router"], rb if rb is not None else jnp.zeros((), jnp.float32),
+                params["w_gate"], params["w_up"], params["w_down"])
+    return y.astype(x.dtype), aux
+
+
+def _moe_ep_replicated(params, x: jnp.ndarray, num_real: int, top_k: int,
+                       activation: str, aux_free: bool, ctx: MoEContext):
+    mesh = ctx.mesh
+    tp = ctx.tp_axis
+    M = mesh.shape[tp]
+    E = params["w_gate"].shape[0]
+    El = E // M
+    dp = ctx.dp_axes
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    bdim = (dp if len(dp) > 1 else (dp[0] if dp else None)) \
+        if x.shape[0] % max(dp_n, 1) == 0 else None
+    x_spec = P(bdim, None, None)   # batch-1 (long-context) fully replicates
+    ew_spec = P(tp, None, None)
+
+    def body(x_loc, router_w, router_bias, w_gate, w_up, w_down):
+        Bl, Sl, d = x_loc.shape
+        t = x_loc.reshape(-1, d)
+        local_params = {"router": router_w}
+        if router_bias is not None and router_bias.ndim:
+            local_params["router_bias"] = router_bias
+        ids, w, aux = _route(local_params, t, num_real, top_k, aux_free)
+        rank = jax.lax.axis_index(tp)
+        lo = rank * El
+        # gate weights for MY local experts only; everything else contributes 0
+        local_gate = jnp.zeros((t.shape[0], El), jnp.float32)
+        for kk in range(top_k):
+            eid = ids[:, kk]
+            mine = (eid >= lo) & (eid < lo + El)
+            idx = jnp.clip(eid - lo, 0, El - 1)
+            local_gate = local_gate.at[jnp.arange(t.shape[0]), idx].add(
+                jnp.where(mine, w[:, kk], 0.0))
+        h = _expert_ffn(jnp.broadcast_to(t[None], (El,) + t.shape).astype(x.dtype),
+                        w_gate, w_up, w_down, activation)     # [El, T, d]
+        y = jnp.einsum("etd,te->td", h.astype(jnp.float32), local_gate)
+        y = jax.lax.psum(y, tp)
+        aux = jax.lax.pmean(aux, tuple(dp) + (tp,)) if dp else jax.lax.pmean(aux, tp)
+        return y.reshape(Bl, Sl, d).astype(x.dtype), aux
+
+    rb = params.get("router_bias")
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P(None) if rb is not None else P(),
+                  ew_spec, ew_spec, ew_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    y, aux = fn(x, params["router"], rb if rb is not None else jnp.zeros((), jnp.float32),
+                params["w_gate"], params["w_up"], params["w_down"])
+    return y, aux
+
+
+def moe_ffn(params, x: jnp.ndarray, *, num_real: int, top_k: int,
+            activation: str, aux_free: bool, ctx: MoEContext):
+    """Full MoE block: routed experts + optional shared expert."""
+    if ctx.impl == "ep":
+        y, aux = moe_ffn_ep(params, x, num_real, top_k, activation, aux_free, ctx)
+    else:
+        y, aux = moe_ffn_dense(params, x, num_real, top_k, activation, aux_free)
+    if "shared" in params:
+        sp = params["shared"]
+        g = act_fn(activation)(x @ sp["wi_gate"])
+        y = y + (g * (x @ sp["wi_up"])) @ sp["wo"]
+    return y, aux
+
+
+def update_router_bias(params, expert_load: jnp.ndarray, num_real: int,
+                       step_size: float = 1e-3):
+    """DeepSeek-v3 aux-loss-free balancing: nudge bias against load imbalance.
+
+    expert_load: [E] fraction of tokens routed to each expert this step.
+    """
+    target = 1.0 / num_real
+    err = jnp.where(jnp.arange(expert_load.shape[0]) < num_real,
+                    target - expert_load, 0.0)
+    return dict(params, router_bias=params["router_bias"] + step_size * jnp.sign(err))

@@ -1,0 +1,342 @@
+"""Recurrent sequence mixers: Mamba-1 selective SSM, xLSTM mLSTM / sLSTM.
+
+Cost-accounting notes (see DESIGN.md §Roofline-methodology):
+
+* Mamba's selective scan is a sequential ``lax.scan`` over time. Its FLOPs are
+  O(S·d_inner·d_state) — ~0.2% of the surrounding projections — so the XLA
+  while-loop body-counted-once artifact is negligible for the compute term;
+  the analytic model in ``repro.analysis.flops`` adds the exact term anyway.
+* mLSTM uses the *stabilized quadratic form* over statically-enumerated tile
+  pairs (same machinery as ``attention.blockwise_attention``), so every FLOP
+  appears in the HLO. The chunkwise-recurrent Pallas kernel is the TPU perf
+  path (``repro.kernels.mlstm_chunkwise``).
+* sLSTM is inherently sequential (recurrent gate feedback) — ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split
+
+NEG_INF = -1e30
+
+
+# =============================================================================
+# Mamba-1 selective SSM
+# =============================================================================
+def init_mamba(key, d_model: int, d_inner: int, d_state: int, d_conv: int, dtype):
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = split(key, 6)
+    # S4D-real initialization for A.
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    inv_softplus_dt = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": inv_softplus_dt.astype(jnp.float32),
+        "A_log": jnp.log(A),          # fp32 [d_inner, d_state]
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype),
+    }
+
+
+def _mamba_conv_full(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                     init_state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Causal depthwise conv over [B, S, d_inner]; returns (y, new_conv_state).
+
+    ``init_state`` is the last (d_conv-1) inputs of the previous chunk
+    ([B, d_conv-1, d_inner]) or None for sequence start.
+    """
+    B, S, d = x.shape
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, K - 1, d), x.dtype)
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)  # [B, S+K-1, d]
+    y = sum(xp[:, i : i + S] * w[i][None, None, :] for i in range(K))
+    new_state = jax.lax.dynamic_slice_in_dim(xp, S, K - 1, axis=1)
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def mamba_mix(params, x: jnp.ndarray, state: Optional[dict]) -> Tuple[jnp.ndarray, dict]:
+    """Full Mamba block mix over a chunk [B, S, d_model].
+
+    ``state``: {"conv": [B, K-1, d_inner], "ssm": [B, d_inner, d_state] fp32}
+    or None at sequence start. Returns (out [B, S, d_model], new_state).
+    """
+    B, S, _ = x.shape
+    d_inner = params["in_proj"].shape[1] // 2
+    d_state = params["A_log"].shape[1]
+    dt_rank = params["dt_proj"].shape[0]
+
+    xz = x @ params["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xm, new_conv = _mamba_conv_full(xm, params["conv_w"], params["conv_b"], conv_state)
+
+    dbc = xm @ params["x_proj"]
+    dt_raw = dbc[..., :dt_rank]
+    Bmat = dbc[..., dt_rank : dt_rank + d_state].astype(jnp.float32)   # [B,S,n]
+    Cmat = dbc[..., dt_rank + d_state :].astype(jnp.float32)           # [B,S,n]
+    dt = jax.nn.softplus(
+        (dt_raw @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"]
+    )  # [B,S,d_inner]
+    A = -jnp.exp(params["A_log"])  # [d_inner, n]
+    xf = xm.astype(jnp.float32)
+
+    h0 = (
+        jnp.zeros((B, d_inner, d_state), jnp.float32)
+        if state is None
+        else state["ssm"].astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp  # [B,d],[B,n],[B,n],[B,d]
+        da = jnp.exp(dt_t[..., None] * A[None])              # [B,d,n]
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2),
+        Bmat.transpose(1, 0, 2),
+        Cmat.transpose(1, 0, 2),
+        xf.transpose(1, 0, 2),
+    )
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + params["D"][None, None, :] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "ssm": hT}
+
+
+def init_mamba_state(B: int, d_inner: int, d_state: int, d_conv: int, dtype) -> dict:
+    return {
+        "conv": jnp.zeros((B, d_conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((B, d_inner, d_state), jnp.float32),
+    }
+
+
+# =============================================================================
+# xLSTM mLSTM (matrix memory)
+# =============================================================================
+def init_mlstm(key, d_model: int, num_heads: int, dtype):
+    """mLSTM block params. Inner dim = 2*d_model (paper's up-projection)."""
+    di = 2 * d_model
+    ks = split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * di, dtype),      # -> (xm, z)
+        "conv_w": (jax.random.normal(ks[1], (4, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_gates": dense_init(ks[5], di, 2 * num_heads, dtype),    # (i, f) per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((num_heads,)), jnp.linspace(3.0, 6.0, num_heads)]
+        ).astype(jnp.float32),
+        "gn_scale": jnp.zeros((di,), dtype),
+        "down_proj": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def _group_norm_heads(x: jnp.ndarray, scale: jnp.ndarray, H: int, eps: float = 1e-6):
+    """Per-head group norm of [B, S, di] (di = H*Dh)."""
+    B, S, di = x.shape
+    xh = x.reshape(B, S, H, di // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(B, S, di) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def mlstm_mix(params, x: jnp.ndarray, state: Optional[dict], num_heads: int,
+              block: int = 512) -> Tuple[jnp.ndarray, dict]:
+    """mLSTM over a chunk [B, S, d_model] with optional carried state.
+
+    Stabilized quadratic form over static tile pairs (exact HLO FLOPs) plus a
+    carried-state ("inter") contribution so chunked prefill is exact.
+    state = {"C": [B,H,Dh,Dh] f32, "n": [B,H,Dh] f32, "m": [B,H] f32,
+             "conv": [B, 3, di], "logf_acc": unused} or None.
+    """
+    B, S, d_model = x.shape
+    H = num_heads
+    di = 2 * d_model
+    Dh = di // H
+
+    xz = x @ params["up_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _mamba_conv_full(xm, params["conv_w"], params["conv_b"], conv_state)
+
+    q = (xc @ params["wq"]).reshape(B, S, H, Dh)
+    k = (xc @ params["wk"]).reshape(B, S, H, Dh) / math.sqrt(Dh)
+    v = (xm @ params["wv"]).reshape(B, S, H, Dh)
+    gates = (xm @ params["w_gates"]).astype(jnp.float32) + params["gate_bias"][None, None, :]
+    log_i = gates[..., :H]                          # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])      # [B,S,H]
+
+    # Inclusive cumulative log-forget within this chunk.
+    F = jnp.cumsum(log_f, axis=1)                   # [B,S,H]
+    if state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    block = min(block, S)
+    while S % block:  # largest divisor of S not exceeding the requested block
+        block -= 1
+    nt = S // block
+    qt = q.reshape(B, nt, block, H, Dh)
+    kt = k.reshape(B, nt, block, H, Dh)
+    vt = v.reshape(B, nt, block, H, Dh)
+    Ft = F.reshape(B, nt, block, H)
+    lit = log_i.reshape(B, nt, block, H)
+
+    out_tiles = []
+    # Running row state across kv tiles, per q tile: handled tile-by-tile.
+    for i in range(nt):
+        F_i = Ft[:, i].transpose(0, 2, 1)           # [B,H,bq]
+        q_i = qt[:, i]
+        # start from the inter-chunk (carried-state) contribution:
+        #   e_inter = F_t + m0 ;  val = q_t · C0 ; norm = q_t · n0
+        m_row = F_i + m0[..., None]                                  # [B,H,bq]
+        acc = jnp.einsum("bqhd,bhde->bhqe", q_i, C0)                 # [B,H,bq,Dh]
+        nrm = jnp.einsum("bqhd,bhd->bhq", q_i, n0)                   # [B,H,bq]
+        if state is None:
+            acc = jnp.zeros((B, H, block, Dh), jnp.float32)
+            nrm = jnp.zeros((B, H, block), jnp.float32)
+        for j in range(i + 1):
+            e = (
+                F_i[..., :, None]
+                - Ft[:, j].transpose(0, 2, 1)[..., None, :]
+                + lit[:, j].transpose(0, 2, 1)[..., None, :]
+            )  # [B,H,bq,bk]
+            if i == j:
+                tri = jnp.tril(jnp.ones((block, block), bool))
+                e = jnp.where(tri[None, None], e, NEG_INF)
+            m_new = jnp.maximum(m_row, jnp.max(e, axis=-1))
+            d = jnp.exp(e - m_new[..., None])
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, kt[:, j],
+                           preferred_element_type=jnp.float32) * d
+            corr = jnp.exp(m_row - m_new)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", s, vt[:, j].astype(jnp.float32))
+            nrm = nrm * corr + jnp.sum(s, axis=-1)
+            m_row = m_new
+        denom = jnp.maximum(jnp.abs(nrm), jnp.exp(-jnp.minimum(m_row, 30.0)))
+        h_i = acc / jnp.maximum(denom, 1e-30)[..., None]             # [B,H,bq,Dh]
+        out_tiles.append(h_i.transpose(0, 2, 1, 3).reshape(B, block, di))
+    h = jnp.concatenate(out_tiles, axis=1) if nt > 1 else out_tiles[0]
+
+    # ---- final carried state (one pass over tiles) --------------------------
+    F_last = F[:, -1]                                                # [B,H]
+    # candidates over all in-chunk s: F_last - F_s + logi_s
+    cand = F_last[:, None, :] - F + log_i                            # [B,S,H]
+    m_state = jnp.maximum(F_last + m0, jnp.max(cand, axis=1))        # [B,H]
+    w = jnp.exp(cand - m_state[:, None, :])                          # [B,S,H]
+    C_new = jnp.exp(F_last + m0 - m_state)[..., None, None] * C0 + jnp.einsum(
+        "bsh,bshd,bshe->bhde", w, k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = jnp.exp(F_last + m0 - m_state)[..., None] * n0 + jnp.einsum(
+        "bsh,bshd->bhd", w, k.astype(jnp.float32))
+
+    h = _group_norm_heads(h.astype(x.dtype), params["gn_scale"], H)
+    out = (h * jax.nn.silu(z)) @ params["down_proj"]
+    return out, {"C": C_new, "n": n_new, "m": m_state, "conv": new_conv}
+
+
+def init_mlstm_state(B: int, d_model: int, num_heads: int, dtype) -> dict:
+    di = 2 * d_model
+    Dh = di // num_heads
+    return {
+        "C": jnp.zeros((B, num_heads, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((B, num_heads, Dh), jnp.float32),
+        "m": jnp.full((B, num_heads), NEG_INF, jnp.float32),
+        "conv": jnp.zeros((B, 3, di), dtype),
+    }
+
+
+def mlstm_decode(params, x: jnp.ndarray, state: dict, num_heads: int
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token mLSTM step. x: [B, 1, d_model]."""
+    out, new_state = mlstm_mix(params, x, state, num_heads, block=1)
+    return out, new_state
+
+
+# =============================================================================
+# xLSTM sLSTM (scalar memory, recurrent gate feedback -> sequential)
+# =============================================================================
+def init_slstm(key, d_model: int, num_heads: int, dtype):
+    Dh = d_model // num_heads
+    ks = split(key, 4)
+    ff = ((4 * d_model // 3) + 63) // 64 * 64
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, dtype),  # z,i,f,o
+        "r_gates": (jax.random.normal(ks[1], (num_heads, Dh, 4 * Dh), jnp.float32)
+                    / math.sqrt(Dh)).astype(dtype),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d_model,)), jnp.ones((d_model,)) * 2.0, jnp.zeros((d_model,))]
+        ).astype(jnp.float32),
+        "gn_scale": jnp.zeros((d_model,), dtype),
+        "up_proj": dense_init(ks[2], d_model, 2 * ff, dtype),
+        "down_proj": dense_init(ks[3], ff, d_model, dtype),
+    }
+
+
+def slstm_mix(params, x: jnp.ndarray, state: Optional[dict], num_heads: int
+              ) -> Tuple[jnp.ndarray, dict]:
+    """sLSTM over [B, S, d]; sequential scan (inherent recurrence)."""
+    B, S, d = x.shape
+    H = num_heads
+    Dh = d // H
+    gx = (x @ params["w_gates"]).astype(jnp.float32) + params["gate_bias"]  # [B,S,4d]
+    gx = gx.reshape(B, S, 4, H, Dh)
+
+    if state is None:
+        state = init_slstm_state(B, d, H, x.dtype)
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    R = params["r_gates"].astype(jnp.float32)  # [H, Dh, 4Dh]
+
+    def step(carry, g_t):
+        c, n, h, m = carry                     # [B,H,Dh] x3, [B,H,Dh]
+        gr = jnp.einsum("bhd,hde->bhe", h, R).reshape(B, H, 4, Dh).transpose(0, 2, 1, 3)
+        g = g_t + gr                           # [B,4,H,Dh]
+        z_t = jnp.tanh(g[:, 0])
+        i_t = g[:, 1]
+        f_t = jax.nn.log_sigmoid(g[:, 2])
+        o_t = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c = f_p * c + i_p * z_t
+        n = f_p * n + i_p
+        h_new = o_t * (c / jnp.maximum(n, 1e-6))
+        return (c, n, h_new, m_new), h_new
+
+    (cT, nT, hT, mT), ys = jax.lax.scan(step, carry0, gx.transpose(1, 0, 2, 3, 4))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm_heads(y, params["gn_scale"], H)
+    up = y @ params["up_proj"]
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a, approximate=True) * b) @ params["down_proj"]
+    return out, {"c": cT, "n": nT, "h": hT, "m": mT}
+
+
+def init_slstm_state(B: int, d_model: int, num_heads: int, dtype) -> dict:
+    Dh = d_model // num_heads
+    z = lambda: jnp.zeros((B, num_heads, Dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": z()}

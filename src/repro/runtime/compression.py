@@ -1,0 +1,65 @@
+"""Int8 gradient compression with error feedback (cross-pod hop).
+
+At 512+ chips the pod-crossing gradient reduce rides DCN, not ICI; int8
+block-quantization cuts that traffic 4x vs fp32 (2x vs bf16). Error feedback
+(residual accumulation) keeps SGD/Adam convergence: the quantization error of
+step t is added back into the gradient of step t+1, so the *accumulated*
+update is unbiased.
+
+All jittable; the compressed representation is (int8 values, fp32 per-block
+scales) so it can be fed directly to an all-reduce/all-gather over the pod
+axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = x.size
+    pad = (-n) % mult
+    return jnp.pad(x.reshape(-1), (0, pad))
+
+
+def compress_leaf(g: jnp.ndarray, ef: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8 [n_blocks, BLOCK], scales fp32 [n_blocks], new_ef)."""
+    gf = g.astype(jnp.float32) + ef
+    flat = _pad_to(gf, BLOCK).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[: g.size].reshape(g.shape)
+    new_ef = gf - deq
+    return q, scale, new_ef
+
+
+def decompress_leaf(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape).astype(dtype)
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads, ef_state):
+    """Round-trips every leaf through int8; returns (decompressed grads,
+    new error-feedback state). This models the cross-pod hop numerically —
+    the launcher applies it to the grads before the pod-axis reduction."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ef = treedef.flatten_up_to(ef_state)
+    outs = []
+    new_efs = []
+    for g, ef in zip(flat_g, flat_ef):
+        q, scale, new_ef = compress_leaf(g, ef)
+        outs.append(decompress_leaf(q, scale, g.shape, g.dtype))
+        new_efs.append(new_ef)
+    return treedef.unflatten(outs), treedef.unflatten(new_efs)

@@ -1,0 +1,1 @@
+"""Serving substrate: requests, queues, KV allocation, engine, simulator."""

@@ -1,0 +1,77 @@
+"""Paged KV-cache block allocator (vLLM-style, §4 substrate).
+
+Token storage is paged into fixed-size blocks; requests own block lists that
+grow as prefill/decode advances. The allocator is the serving engine's and
+simulator's admission/ preemption authority: a request is admitted only when
+its full prompt plus a decode reserve fits, and decode growth failures trigger
+eviction of the lowest-priority owner (recompute-on-resume policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class _Owner:
+    rid: int
+    blocks: int
+    tokens: int
+
+
+class BlockAllocator:
+    def __init__(self, capacity_tokens: int, block_size: int = 16):
+        assert capacity_tokens > 0 and block_size > 0
+        self.block_size = block_size
+        self.num_blocks = capacity_tokens // block_size
+        self.free_blocks = self.num_blocks
+        self.owners: Dict[int, _Owner] = {}
+
+    # ---- queries --------------------------------------------------------------
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_admit(self, prompt_len: int, reserve_tokens: int = 0) -> bool:
+        return self.blocks_for(prompt_len + reserve_tokens) <= self.free_blocks
+
+    def used_tokens(self) -> int:
+        return sum(o.tokens for o in self.owners.values())
+
+    def utilization(self) -> float:
+        return 1.0 - self.free_blocks / self.num_blocks
+
+    # ---- lifecycle --------------------------------------------------------------
+    def admit(self, rid: int, initial_tokens: int = 0) -> bool:
+        assert rid not in self.owners, f"double admit {rid}"
+        need = self.blocks_for(initial_tokens) if initial_tokens else 0
+        if need > self.free_blocks:
+            return False
+        self.owners[rid] = _Owner(rid, need, initial_tokens)
+        self.free_blocks -= need
+        return True
+
+    def grow(self, rid: int, new_tokens: int) -> bool:
+        """Extend rid's allocation to cover ``new_tokens`` total tokens."""
+        o = self.owners[rid]
+        if new_tokens <= o.tokens:
+            return True
+        need = self.blocks_for(new_tokens) - o.blocks
+        if need > self.free_blocks:
+            return False
+        o.blocks += need
+        o.tokens = new_tokens
+        self.free_blocks -= need
+        return True
+
+    def free(self, rid: int) -> None:
+        o = self.owners.pop(rid, None)
+        if o is not None:
+            self.free_blocks += o.blocks
+
+    # ---- invariants (property-tested) -------------------------------------------
+    def check_invariants(self) -> None:
+        used = sum(o.blocks for o in self.owners.values())
+        assert used + self.free_blocks == self.num_blocks, "block leak"
+        assert self.free_blocks >= 0, "overcommit"
+        for o in self.owners.values():
+            assert o.blocks * self.block_size >= o.tokens, "owner under-allocated"

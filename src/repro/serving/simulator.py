@@ -1,0 +1,152 @@
+"""Event-driven serving simulator (the paper's evaluation harness).
+
+Executes a scheduler against the analytic ground-truth cost model: each round
+the scheduler emits a request-level token allocation; the simulator charges
+the batch's (noisy) latency, advances request state — chunked prefill
+progress, first-token emission when prefill completes, one token per decode
+request — enforces paged-KV admission/preemption, and feeds the observed
+latency back to the scheduler's online predictor. Wall-clock in the simulated
+timeline is exact; the Python loop itself is cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import Decision, SchedulerBase
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.costmodel import CostModel
+from repro.serving.request import ReqState, Request
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    duration: float
+    iterations: int
+    route_counts: Dict[str, int]
+    trace: List[Tuple[float, float, int]]  # (t, latency, scheduled_tokens)
+
+
+class ServingSimulator:
+    def __init__(self, scheduler: SchedulerBase, cost_model: CostModel,
+                 workload: Sequence[Request], *,
+                 kv_capacity_tokens: int = 512 * 1024,
+                 block_size: int = 16,
+                 decode_reserve_tokens: int = 64,
+                 max_sim_time: float = 1e9,
+                 warmup_predictor: bool = True,
+                 collect_trace: bool = False):
+        self.sched = scheduler
+        self.cost = cost_model
+        self.workload = sorted(workload, key=lambda r: r.arrival)
+        self.alloc = BlockAllocator(kv_capacity_tokens, block_size)
+        self.decode_reserve = decode_reserve_tokens
+        self.max_sim_time = max_sim_time
+        self.collect_trace = collect_trace
+        if warmup_predictor:
+            self._offline_calibration()
+
+    # ---- offline predictor init (paper §3.2 "offline initialization") ---------
+    def _offline_calibration(self, n: int = 600, seed: int = 1234):
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        samples = []
+        for _ in range(n):
+            nd = int(rng.integers(0, 48))
+            np_ = int(rng.integers(0, 5))
+            batch = [(1, int(rng.integers(16, 8192))) for _ in range(nd)]
+            batch += [(int(rng.integers(2, 2048)), int(rng.integers(0, 8192)))
+                      for _ in range(np_)]
+            if not batch:
+                continue
+            samples.append((batch, self.cost.latency(batch, noisy=True)))
+        self.sched.predictor.fit_offline(samples)
+
+    # ---- main loop --------------------------------------------------------------
+    def run(self) -> SimResult:
+        t = 0.0
+        pending = list(self.workload)   # not yet arrived
+        waiting: List[Request] = []
+        active: List[Request] = []      # prefilling or decoding, KV-resident
+        iterations = 0
+        route_counts: Dict[str, int] = {}
+        trace: List[Tuple[float, float, int]] = []
+
+        def admit_arrivals(now: float):
+            while pending and pending[0].arrival <= now:
+                waiting.append(pending.pop(0))
+
+        while (pending or waiting or active) and t < self.max_sim_time:
+            admit_arrivals(t)
+
+            # KV admission: move waiting -> active when the prompt + reserve fits.
+            still_waiting: List[Request] = []
+            for r in waiting:
+                if self.alloc.can_admit(r.prompt_len, self.decode_reserve):
+                    assert self.alloc.admit(r.rid, 0)
+                    active.append(r)
+                else:
+                    still_waiting.append(r)
+            waiting = still_waiting
+
+            prefilling = [r for r in active if r.state in (ReqState.WAITING, ReqState.PREFILLING)]
+            decoding = [r for r in active if r.state == ReqState.DECODING]
+
+            decision = self.sched.schedule(t, [], prefilling, decoding)
+            if decision is None or not decision.alloc:
+                if pending:
+                    t = max(t, pending[0].arrival)
+                    continue
+                break
+
+            batch = decision.batch()
+            latency = self.cost.latency(batch, noisy=True)
+            t += latency
+            iterations += 1
+            route_counts[decision.route] = route_counts.get(decision.route, 0) + 1
+            if self.collect_trace:
+                trace.append((t, latency, sum(c for c, _ in batch)))
+
+            finished: List[Request] = []
+            for req, n in decision.alloc:
+                if req.state == ReqState.DECODING:
+                    if not self.alloc.grow(req.rid, req.context_len() + 1):
+                        self._evict_for(req, active, waiting)
+                        self.alloc.grow(req.rid, req.context_len() + 1)
+                    req.emit_token(t)
+                else:
+                    self.alloc.grow(req.rid, req.prefilled + n)
+                    req.advance_prefill(n)
+                    if req.remaining_prefill() == 0:
+                        req.emit_token(t)  # prefill completion emits token 1
+                if req.state == ReqState.FINISHED:
+                    finished.append(req)
+            for req in finished:
+                self.alloc.free(req.rid)
+                active.remove(req)
+
+            self.sched.observe(batch, latency)
+            self.alloc.check_invariants()
+
+        return SimResult(requests=list(self.workload), duration=t,
+                         iterations=iterations, route_counts=route_counts,
+                         trace=trace)
+
+    # ---- preemption ---------------------------------------------------------------
+    def _evict_for(self, needy: Request, active: List[Request],
+                   waiting: List[Request]) -> None:
+        """Free blocks by relegating the newest non-needy decoding request
+        (vLLM recompute policy): its cache is dropped, prefill restarts."""
+        victims = sorted(
+            (r for r in active if r.rid != needy.rid and r.state == ReqState.DECODING),
+            key=lambda r: -r.arrival,
+        )
+        for v in victims:
+            self.alloc.free(v.rid)
+            active.remove(v)
+            v.state = ReqState.WAITING
+            v.prefilled = 0
+            waiting.append(v)
+            if self.alloc.free_blocks * self.alloc.block_size >= self.decode_reserve:
+                return

@@ -1,0 +1,118 @@
+"""Sharded checkpointing: per-leaf .npy shards + a msgpack manifest.
+
+Layout (one directory per step)::
+
+    ckpt_dir/step_000123/
+        manifest.msgpack        # treedef paths, shapes, dtypes, step, mesh
+        leaf_00000.npy ...      # one file per pytree leaf
+
+Saves are atomic (write to ``.tmp`` then rename) and optionally asynchronous
+(background thread — the training loop never blocks on disk). Restore is
+mesh-agnostic: arrays are loaded on host and re-placed with whatever sharding
+the (possibly different-size) new mesh dictates — this is the elastic-restart
+path (``repro.runtime.elastic``).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _leaf_paths(tree) -> list:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(path))
+    return paths
+
+
+_NP_UNSUPPORTED = ("bfloat16", "float8_e4m3fn", "float8_e5m2")
+
+
+def _to_storable(x: np.ndarray):
+    """numpy .npy cannot round-trip ml_dtypes types; store a byte view."""
+    if str(x.dtype) in _NP_UNSUPPORTED:
+        return x.view(np.uint8 if x.dtype.itemsize == 1 else np.uint16), str(x.dtype)
+    return x, str(x.dtype)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
+         async_save: bool = False) -> Optional[threading.Thread]:
+    """Serialize a pytree. Returns the writer thread when async."""
+    leaves = jax.tree.leaves(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+    paths = _leaf_paths(tree)
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        storable = [_to_storable(x) for x in host_leaves]
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [d for _, d in storable],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        for i, (x, _) in enumerate(storable):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), x)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Rebuild the pytree of ``like``'s structure; optionally re-shard each
+    leaf (elastic restart onto a different mesh)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == len(manifest["paths"]), (
+        f"checkpoint has {len(manifest['paths'])} leaves, "
+        f"expected {len(leaves_like)}")
+    out = []
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(leaves_like))
+    import ml_dtypes
+    for i, (ref, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        x = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        stored_dtype = manifest["dtypes"][i]
+        if stored_dtype in _NP_UNSUPPORTED:
+            x = x.view(ml_dtypes.bfloat16 if stored_dtype == "bfloat16"
+                       else np.dtype(getattr(ml_dtypes, stored_dtype)))
+        arr = jnp.asarray(x, dtype=ref.dtype)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out.append(arr)
+    return treedef.unflatten(out)
+
+
+def manifest_of(ckpt_dir: str, step: int) -> dict:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())

@@ -1,0 +1,93 @@
+"""AdamW in pure JAX with fp32 master weights for bf16 params.
+
+Sharding posture (ZeRO-1/2 style): the optimizer state pytree mirrors the
+param pytree, so the launcher assigns it PartitionSpecs that shard the moments
+(and master copy) over the (pod, data) axes in addition to the params' model
+sharding — see ``repro.launch.sharding.opt_state_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def adamw_init(params) -> dict:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+    master = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype != jnp.float32 else None, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_f32, params),
+        "v": jax.tree.map(zeros_like_f32, params),
+        "master": master,
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        new_master = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        new_p = new_master.astype(p.dtype)
+        return new_p, m, v, (new_master if master is not None else None)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    out = [upd(p, g, m, v, ma)
+           for p, g, m, v, ma in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "step": step,
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "master": treedef.unflatten([o[3] for o in out]),
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

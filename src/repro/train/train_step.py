@@ -1,0 +1,80 @@
+"""Train-step factory: loss + grads + AdamW update (+ optional gradient
+compression for the cross-pod hop), with configurable remat policy and
+gradient accumulation."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import RunCtx, loss_fn
+from repro.runtime import compression
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    grad_accum: int = 1
+    compress_grads: bool = False
+
+
+def init_train_state(cfg: ModelConfig, params, train_cfg: TrainConfig):
+    state = {"opt": adamw_init(params)}
+    if train_cfg.compress_grads:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, rctx: RunCtx, train_cfg: TrainConfig):
+    """Returns train_step(params, state, batch) -> (params, state, metrics).
+
+    ``batch["tokens"]``: [B, S] (plus optional modality-frontend entries).
+    With grad_accum > 1, the batch is split along B and accumulated via scan
+    (bounds activation memory; grads stream into the fp32 accumulator).
+    """
+
+    def loss_wrapped(p, micro):
+        return loss_fn(cfg, p, micro, rctx)
+
+    def compute_grads(params, batch):
+        if train_cfg.grad_accum == 1:
+            return jax.value_and_grad(loss_wrapped)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % train_cfg.grad_accum == 0
+        micro_b = B // train_cfg.grad_accum
+
+        def micro_slice(i, arr):
+            return jax.lax.dynamic_slice_in_dim(arr, i * micro_b, micro_b, 0)
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            micro = {k: micro_slice(i, v) for k, v in batch.items()}
+            loss, grads = jax.value_and_grad(loss_wrapped)(params, micro)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), zeros), jnp.arange(train_cfg.grad_accum))
+        inv = 1.0 / train_cfg.grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, state, batch):
+        loss, grads = compute_grads(params, batch)
+        if train_cfg.compress_grads:
+            grads, new_ef = compression.compress_tree(grads, state["ef"])
+        new_params, new_opt, metrics = adamw_update(
+            train_cfg.optimizer, params, grads, state["opt"])
+        new_state = {"opt": new_opt}
+        if train_cfg.compress_grads:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,51 @@
+"""Launch-stack smoke: lower+compile representative cells on a small forced
+mesh in a subprocess (the dry-run needs its own XLA device-count flag)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CASES = [
+    ("llama3.2-3b", "decode_32k"),
+    ("qwen2-moe-a2.7b", "decode_32k"),   # EP shard_map path
+    ("xlstm-125m", "train_4k"),          # DP-only tiny model
+]
+
+
+@pytest.mark.parametrize("arch,shape", CASES)
+def test_dryrun_cell_small_mesh(arch, shape):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_FORCE_MESH="2x4",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    code = (
+        "import os\n"
+        "os.environ['XLA_FLAGS'] = os.environ.get('XLA_FLAGS')\n"
+        "from repro.launch import dryrun\n"
+        f"res = dryrun.run_cell({arch!r}, {shape!r}, multi_pod=False)\n"
+        "assert res['status'] == 'ok', res\n"
+        "print('CELL_OK', res['flops_per_dev'])\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert "CELL_OK" in out.stdout, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+
+
+def test_dryrun_multipod_small_mesh():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_FORCE_MESH="2x2x4",
+               XLA_FLAGS="--xla_force_host_platform_device_count=16")
+    code = (
+        "import os\n"
+        "from repro.launch import dryrun\n"
+        "res = dryrun.run_cell('gemma2-2b', 'decode_32k', multi_pod=True)\n"
+        "assert res['status'] == 'ok', res\n"
+        "print('CELL_OK')\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert "CELL_OK" in out.stdout, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"

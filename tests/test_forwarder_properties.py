@@ -1,0 +1,92 @@
+"""Property tests for the BatchForwarder and SlidingChunker invariants
+(hypothesis-driven; pure host-side, fast)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.forwarder import BatchForwarder
+from repro.core.sliding_chunker import sliding_chunker
+from repro.serving.request import ReqState, Request
+
+
+class LinearPredictor:
+    """Latency = overhead + a * tokens + b * context (monotone in budget)."""
+
+    def predict(self, batch):
+        if not batch:
+            return 0.0
+        return (1e-3 + 2e-5 * sum(c for c, _ in batch)
+                + 1e-8 * sum(u for _, u in batch))
+
+
+def mk_prefill(rid, prompt, prefilled=0, ttft=10.0):
+    r = Request(rid=rid, arrival=0.0, prompt_len=prompt, max_output=4,
+                ttft_slo=ttft, tbt_slo=0.05)
+    r.prefilled = prefilled
+    if prefilled:
+        r.state = ReqState.PREFILLING
+    return r
+
+
+def mk_decode(rid, ctx):
+    r = Request(rid=rid, arrival=0.0, prompt_len=ctx, max_output=64,
+                ttft_slo=10.0, tbt_slo=0.05)
+    r.prefilled = ctx
+    r.generated = 2
+    r.state = ReqState.DECODING
+    r.first_token_time = 0.1
+    r.token_times = [0.1, 0.15]
+    return r
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(8, 2000), min_size=0, max_size=6),
+       st.integers(0, 12),
+       st.integers(0, 4096))
+def test_allocation_conservation(prompts, n_decode, budget):
+    """Allocation never exceeds the budget, never over-serves a request, and
+    decodes always get exactly one token each."""
+    F = BatchForwarder(LinearPredictor(), max_budget=8192)
+    P = [mk_prefill(i, p) for i, p in enumerate(prompts)]
+    D = [mk_decode(100 + i, 128) for i in range(n_decode)]
+    alloc = F.allocate(D, P, budget)
+    total = sum(n for _, n in alloc)
+    assert total <= max(budget, len(D))
+    amap = {id(r): n for r, n in alloc}
+    for r in D:
+        assert amap.get(id(r)) == 1
+    for r in P:
+        got = amap.get(id(r), 0)
+        assert 0 <= got <= r.remaining_prefill()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(8, 2000), min_size=1, max_size=5),
+       st.integers(1, 8))
+def test_pred_next_conserves_work(prompts, n_decode):
+    """Window-2 batches never contain more prefill work than remains after
+    window 1 (the state-advance fix for Alg. 1's double-count, DESIGN D1)."""
+    F = BatchForwarder(LinearPredictor(), max_budget=8192)
+    P = [mk_prefill(i, p) for i, p in enumerate(prompts)]
+    D = [mk_decode(100 + i, 128) for i in range(n_decode)]
+    _, alloc1 = F.forward(D, P, 1024)
+    batch2 = F._next_batch(D, P, alloc1, 10_000)
+    taken1 = sum(n for r, n in alloc1 if n > 1)
+    prefill2 = sum(c for c, _ in batch2 if c > 1)
+    total_work = sum(p for p in prompts)
+    assert taken1 + prefill2 <= total_work
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(64, 4000), min_size=1, max_size=4),
+       st.floats(0.02, 0.5), st.floats(0.02, 0.5))
+def test_chunker_liveness_and_budget_bounds(prompts, t_cur, t_next):
+    """The chunker always schedules work when work+slack exist, and its
+    predicted current-window time respects the clamp."""
+    F = BatchForwarder(LinearPredictor(), max_budget=8192)
+    P = [mk_prefill(i, p) for i, p in enumerate(prompts)]
+    b, alloc, pred = sliding_chunker([], P, 8192, 0.0, t_cur, t_next, F)
+    assert alloc, "liveness: pending work must be scheduled"
+    assert pred <= t_cur + 1e-9, "clamp: current window may not exceed T_cur"
+    assert b <= sum(prompts), "budget never exceeds pending work"

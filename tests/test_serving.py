@@ -1,0 +1,161 @@
+"""Serving substrate tests: allocator invariants (property-based), workload
+statistics vs paper Table 2, request deadline math (Eq. 1), cost model
+regimes, simulator conservation laws."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.bench_models import QWEN25_7B
+from repro.core import SlidingServeScheduler
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.costmodel import CostModel, HardwareSpec, ModelProfile
+from repro.serving.metrics import cumulative_violations, max_goodput, summarize
+from repro.serving.request import Request
+from repro.serving.simulator import ServingSimulator
+from repro.serving.workloads import TABLE2, WorkloadSpec, make_workload
+
+HW = HardwareSpec(chips=1)
+PROF = ModelProfile.from_config(QWEN25_7B)
+
+
+# ---------------------------------------------------------------------------
+# request / SLO model
+# ---------------------------------------------------------------------------
+def test_token_deadlines_eq1():
+    r = Request(rid=0, arrival=10.0, prompt_len=100, max_output=5,
+                ttft_slo=2.0, tbt_slo=0.04)
+    assert r.token_deadline(1) == 12.0
+    assert r.token_deadline(4) == 12.0 + 3 * 0.04
+    r.emit_token(11.0)
+    assert r.first_token_time == 11.0
+    r.emit_token(12.1)  # due 12.04 -> late
+    v = r.violations()
+    assert v["ttft_miss"] == 0 and v["tbt_misses"] == 1 and v["violated"] == 1
+
+
+def test_sched_slack_recovers_after_lateness():
+    r = Request(rid=0, arrival=0.0, prompt_len=10, max_output=50,
+                ttft_slo=0.1, tbt_slo=0.04)
+    r.emit_token(5.0)  # absurdly late first token
+    assert r.decode_slack(5.0) < 0            # metric slack: violated
+    assert r.sched_decode_slack(5.0) > 0      # scheduling slack: cadence
+
+
+# ---------------------------------------------------------------------------
+# block allocator
+# ---------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["admit", "grow", "free"]),
+                          st.integers(0, 7), st.integers(0, 600)),
+                max_size=60))
+def test_allocator_invariants(ops):
+    a = BlockAllocator(capacity_tokens=2048, block_size=16)
+    live = set()
+    for op, rid, tokens in ops:
+        if op == "admit" and rid not in live:
+            if a.admit(rid, tokens % 256):
+                live.add(rid)
+        elif op == "grow" and rid in live:
+            a.grow(rid, tokens)
+        elif op == "free" and rid in live:
+            a.free(rid)
+            live.discard(rid)
+        a.check_invariants()
+    for rid in list(live):
+        a.free(rid)
+    assert a.free_blocks == a.num_blocks
+
+
+def test_allocator_admission_control():
+    a = BlockAllocator(capacity_tokens=160, block_size=16)
+    assert a.can_admit(100, 32)
+    assert not a.can_admit(200)
+    assert a.admit(1, 128)
+    assert not a.admit(2, 64)   # only 2 blocks left
+    a.free(1)
+    assert a.admit(2, 64)
+
+
+# ---------------------------------------------------------------------------
+# workloads vs Table 2
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dataset", list(TABLE2))
+def test_workload_matches_table2(dataset):
+    cm = CostModel(PROF, HW, seed=0)
+    wl = make_workload(WorkloadSpec(dataset, qps=20.0, duration=400, seed=11), cm)
+    p = np.array([r.prompt_len for r in wl])
+    o = np.array([r.max_output for r in wl])
+    tgt = TABLE2[dataset]
+    assert abs(p.mean() - tgt["prompt"][0]) / tgt["prompt"][0] < 0.15
+    assert abs(np.percentile(p, 90) - tgt["prompt"][1]) / tgt["prompt"][1] < 0.20
+    assert abs(o.mean() - tgt["output"][0]) / tgt["output"][0] < 0.15
+
+
+def test_workload_poisson_rate():
+    cm = CostModel(PROF, HW, seed=0)
+    wl = make_workload(WorkloadSpec("sharegpt", qps=5.0, duration=400, seed=2), cm)
+    rate = len(wl) / 400.0
+    assert abs(rate - 5.0) < 0.75
+
+
+# ---------------------------------------------------------------------------
+# cost model regimes
+# ---------------------------------------------------------------------------
+def test_costmodel_decode_memory_bound():
+    cm = CostModel(PROF, HW, noise_sigma=0)
+    t_small = cm.latency([(1, 128)], noisy=False)
+    t_big_batch = cm.latency([(1, 128)] * 32, noisy=False)
+    # weight streaming dominates small decode batches: near-flat scaling
+    assert t_big_batch < 4 * t_small
+
+
+def test_costmodel_prefill_compute_bound():
+    cm = CostModel(PROF, HW, noise_sigma=0)
+    t1 = cm.latency([(1024, 0)], noisy=False)
+    t2 = cm.latency([(4096, 0)], noisy=False)
+    assert 3.0 < t2 / t1 < 5.0   # ~linear in tokens once compute-bound
+
+
+def test_costmodel_attention_term_grows_with_context():
+    cm = CostModel(PROF, HW, noise_sigma=0)
+    assert cm.latency([(512, 16384)], noisy=False) > cm.latency([(512, 0)], noisy=False)
+
+
+# ---------------------------------------------------------------------------
+# simulator conservation
+# ---------------------------------------------------------------------------
+def test_simulator_conservation_and_completion():
+    cm = CostModel(PROF, HW, seed=5)
+    wl = make_workload(WorkloadSpec("sharegpt", qps=2.0, duration=30, seed=5), cm)
+    sched = SlidingServeScheduler(max_budget=4096)
+    sim = ServingSimulator(sched, cm, wl, kv_capacity_tokens=256 * 1024)
+    res = sim.run()
+    for r in res.requests:
+        assert r.finish_time is not None, f"request {r.rid} never finished"
+        assert r.prefilled == r.prompt_len
+        assert r.generated == r.max_output
+        assert len(r.token_times) == r.max_output
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+        assert r.token_times[0] >= r.arrival
+    assert sim.alloc.free_blocks == sim.alloc.num_blocks  # all KV freed
+
+
+def test_metrics_and_goodput_search():
+    cm = CostModel(PROF, HW, seed=5)
+    wl = make_workload(WorkloadSpec("sharegpt", qps=2.0, duration=30, seed=5), cm)
+    sched = SlidingServeScheduler(max_budget=4096)
+    sim = ServingSimulator(sched, cm, wl, kv_capacity_tokens=256 * 1024)
+    res = sim.run()
+    s = summarize(res.requests, res.duration)
+    assert 0 <= s["violation_rate"] <= 1
+    assert s["n_finished"] == s["n_requests"]
+    cv = cumulative_violations(res.requests, res.duration)
+    assert cv[-1][1] == sum(r.violations()["violated"] for r in res.requests)
+
+    # goodput search against a synthetic monotone violation curve
+    def fake_run(qps):
+        return {"violation_rate": 0.0 if qps <= 3.3 else 0.5, "goodput_rps": qps}
+    out = max_goodput(fake_run, 0.5, 8.0, iters=10)
+    assert abs(out["qps"] - 3.3) < 0.1
