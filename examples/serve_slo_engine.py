@@ -21,11 +21,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--cache-mode", default="auto",
+                    choices=["auto", "slot", "paged"])
+    ap.add_argument("--kv-tokens", type=int, default=4096)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     sched = SlidingServeScheduler(max_budget=512, max_iter_time=2.0)
-    engine = ServingEngine(cfg, sched, max_slots=4, max_len=512)
+    engine = ServingEngine(cfg, sched, cache_mode=args.cache_mode,
+                           max_slots=4, max_len=512,
+                           kv_capacity_tokens=args.kv_tokens)
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -35,7 +40,8 @@ def main():
                 ttft_slo=30.0, tbt_slo=30.0)
         for i in range(args.requests)
     ]
-    print(f"serving {len(reqs)} requests on {cfg.name} (reduced config, CPU)...")
+    print(f"serving {len(reqs)} requests on {cfg.name} "
+          f"({engine.cache_mode} KV cache, reduced config, CPU)...")
     out = engine.serve(reqs, max_wall_s=240.0)
     for r in out["finished"]:
         toks = out["outputs"][r.rid]
@@ -44,7 +50,8 @@ def main():
     st = out["stats"]
     print(f"iterations={st.iterations} prefill_calls={st.prefill_calls} "
           f"decode_calls={st.decode_calls} jit_shapes={st.compiled_shapes} "
-          f"wall={out['wall']:.1f}s")
+          f"max_round_calls={st.max_round_calls} "
+          f"max_concurrency={st.max_concurrency} wall={out['wall']:.1f}s")
     print(f"predictor saw {engine.sched.predictor.observed} real batch latencies")
 
 

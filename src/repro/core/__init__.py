@@ -13,7 +13,7 @@
 - ``scheduler`` — the closed loop (Fig. 3) + the Violation Checker routing.
 - ``baselines`` — Sarathi-EDF, QoServe-like, vLLM-FCFS, single-step greedy.
 """
-from repro.core.scheduler import SlidingServeScheduler  # noqa: F401
+from repro.core.scheduler import KVPressure, SlidingServeScheduler  # noqa: F401
 from repro.core.baselines import (  # noqa: F401
     FCFSStaticScheduler, QoServeLikeScheduler, SarathiEDFScheduler,
     SingleStepGreedyScheduler,

@@ -27,12 +27,13 @@ class FCFSStaticScheduler(SchedulerBase):
         super().__init__(predictor, max_budget)
         self.chunk_budget = chunk_budget
 
-    def schedule(self, t, waiting, prefilling, decoding):
+    def schedule(self, t, waiting, prefilling, decoding, kv=None):
         P = sorted(list(prefilling) + list(waiting), key=lambda r: r.arrival)
-        pred, alloc = self.F.forward(list(decoding), P, self.chunk_budget)
+        budget = min(self.chunk_budget, self._budget_cap(decoding, kv))
+        pred, alloc = self.F.forward(list(decoding), P, budget)
         if not alloc:
             return None
-        return Decision(alloc, pred, self.chunk_budget, self.name)
+        return Decision(alloc, pred, budget, self.name)
 
 
 class SarathiEDFScheduler(SchedulerBase):
@@ -42,23 +43,24 @@ class SarathiEDFScheduler(SchedulerBase):
         super().__init__(predictor, max_budget)
         self.chunk_budget = chunk_budget
 
-    def schedule(self, t, waiting, prefilling, decoding):
+    def schedule(self, t, waiting, prefilling, decoding, kv=None):
         P = sorted(list(prefilling) + list(waiting), key=lambda r: r.ttft_deadline())
-        pred, alloc = self.F.forward(list(decoding), P, self.chunk_budget)
+        budget = min(self.chunk_budget, self._budget_cap(decoding, kv))
+        pred, alloc = self.F.forward(list(decoding), P, budget)
         if not alloc:
             return None
-        return Decision(alloc, pred, self.chunk_budget, self.name)
+        return Decision(alloc, pred, budget, self.name)
 
 
 class SingleStepGreedyScheduler(SchedulerBase):
     name = "single-step"
 
-    def schedule(self, t, waiting, prefilling, decoding):
+    def schedule(self, t, waiting, prefilling, decoding, kv=None):
         P = sorted(list(prefilling) + list(waiting), key=lambda r: r.ttft_deadline())
         D = list(decoding)
         t_cur, _ = window_bounds(D, t, default_cur=self.max_iter_time)
         t_cur = min(t_cur, self.max_iter_time)
-        budget = self.F.time_to_budget(D, P, t_cur)
+        budget = min(self.F.time_to_budget(D, P, t_cur), self._budget_cap(D, kv))
         pred, alloc = self.F.forward(D, P, budget)
         if not alloc:
             return None
@@ -80,12 +82,12 @@ class QoServeLikeScheduler(SchedulerBase):
         score = r.ttft_slack(t) - self.urgency_weight * est_time
         return (expired, score, r.remaining_prefill())
 
-    def schedule(self, t, waiting, prefilling, decoding):
+    def schedule(self, t, waiting, prefilling, decoding, kv=None):
         P = sorted(list(prefilling) + list(waiting), key=lambda r: self._key(r, t))
         D = list(decoding)
         t_cur, _ = window_bounds(D, t, default_cur=self.max_iter_time)
         t_cur = min(t_cur, self.max_iter_time)
-        budget = self.F.time_to_budget(D, P, t_cur)
+        budget = min(self.F.time_to_budget(D, P, t_cur), self._budget_cap(D, kv))
         pred, alloc = self.F.forward(D, P, budget)
         if not alloc:
             return None

@@ -32,10 +32,27 @@ class Decision:
         return [(n, r.context_len()) for r, n in self.alloc]
 
 
+@dataclasses.dataclass(frozen=True)
+class KVPressure:
+    """Paged-KV memory state the executor surfaces to the scheduler each
+    round, so chunk budgets can back off before allocation failures force
+    evict-and-recompute churn.
+
+    ``free_tokens`` — new tokens storable without eviction (free pages plus
+    owners' tail-page slack). ``evictions`` — evictions since the previous
+    ``schedule`` call (not lifetime)."""
+
+    utilization: float = 0.0
+    free_tokens: int = 1 << 30
+    evictions: int = 0
+
+
 class SchedulerBase:
     """Common interface + shared observation machinery."""
 
     name = "base"
+    # back off hard once this fraction of KV is resident (pre-eviction guard)
+    kv_backoff_util = 0.92
 
     def __init__(self, predictor: Optional[BatchLatencyPredictor] = None,
                  max_budget: int = 4096, budget_quantum: int = 1,
@@ -50,13 +67,33 @@ class SchedulerBase:
         self.max_iter_time = max_iter_time
         self.rho = 1000.0          # tokens/s EMA (Eq. 9's rho_t)
         self._rho_beta = 0.9
+        self.last_kv: Optional[KVPressure] = None
 
     def schedule(self, t: float, waiting: Sequence[Request],
                  prefilling: Sequence[Request],
-                 decoding: Sequence[Request]) -> Optional[Decision]:
+                 decoding: Sequence[Request],
+                 kv: Optional[KVPressure] = None) -> Optional[Decision]:
         raise NotImplementedError
 
-    def observe(self, batch: Sequence[Tuple[int, int]], latency: float) -> None:
+    def _budget_cap(self, decoding: Sequence[Request],
+                    kv: Optional[KVPressure]) -> int:
+        """Effective token budget under KV pressure: every scheduled token
+        becomes a cache entry, so never schedule more than fits free, and
+        halve the target while evictions are happening (churn costs full
+        recompute of the victim)."""
+        self.last_kv = kv
+        if kv is None:
+            return self.max_budget
+        floor = len(decoding) + 1          # liveness: decodes + 1 prefill token
+        cap = max(floor, kv.free_tokens)
+        if kv.evictions > 0 or kv.utilization > self.kv_backoff_util:
+            cap = max(floor, cap // 2)
+        return min(self.max_budget, cap)
+
+    def observe(self, batch: Sequence[Tuple[int, int]], latency: float,
+                kv: Optional[KVPressure] = None) -> None:
+        if kv is not None:
+            self.last_kv = kv
         self.predictor.observe(batch, latency)
         if latency > 0:
             # rho_t estimates how fast *prefill* work drains (Eq. 9 divides
@@ -94,13 +131,17 @@ class SlidingServeScheduler(SchedulerBase):
         cands = list(prefilling) + list(waiting)
         return sorted(cands, key=lambda r: r.ttft_deadline())   # EDF fallback
 
-    def schedule(self, t, waiting, prefilling, decoding):
+    def schedule(self, t, waiting, prefilling, decoding, kv=None):
         if not (waiting or prefilling or decoding):
             return None
         P = self._sorted(t, waiting, prefilling)
         D = list(decoding)
         t_cur, t_next = window_bounds(D, t, default_cur=self.max_iter_time)
         t_cur = min(t_cur, self.max_iter_time)
+        # KV pressure (paged engine): cap the token budget at what the cache
+        # can absorb so SlidingChunker/BatchConstructor never schedule chunks
+        # whose KV writes would immediately evict an active request.
+        max_budget = self._budget_cap(D, kv)
 
         # (4) Violation Checker on the maximal candidate batch. The paper's
         # risk test (slack < T_full) is refined with the Eq.-10 urgency gate:
@@ -109,11 +150,11 @@ class SlidingServeScheduler(SchedulerBase):
         # finish it and a dedicated BC batch would pay its cost for nothing.
         route = "sliding"
         if self.enable_bc and P:
-            t_full, _ = self.F.forward(D, P, self.max_budget)
+            t_full, _ = self.F.forward(D, P, max_budget)
             from repro.core.sorter import normalized_urgency
             if any(r.ttft_slack(t) < t_full and r.ttft_slack(t) > 0
                    and normalized_urgency(r, t, self.rho) > 1.0 for r in P):
-                res = batch_constructor(D, P, self.max_budget, t, self.F,
+                res = batch_constructor(D, P, max_budget, t, self.F,
                                         granularity=self.knapsack_granularity)
                 if res is not None:
                     budget, alloc = res
@@ -124,10 +165,12 @@ class SlidingServeScheduler(SchedulerBase):
         # (5) SlidingChunker branch (or single-step when ablated off).
         if self.enable_sliding:
             budget, alloc, pred = sliding_chunker(
-                D, P, self.max_budget, t, t_cur, t_next, self.F,
+                D, P, max_budget, t, t_cur, t_next, self.F,
                 clamp_current=self.clamp_current, objective=self.objective)
         else:
-            budget = self.F.time_to_budget(D, P, t_cur)
+            # single-step ablation honors the same KV cap as the other paths,
+            # else its ablated runs pay eviction churn the baselines don't
+            budget = min(self.F.time_to_budget(D, P, t_cur), max_budget)
             pred, alloc = self.F.forward(D, P, budget)
         if not alloc and (D or P):
             # liveness guard: never idle while work is pending

@@ -6,6 +6,7 @@ import functools
 import jax
 
 from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
@@ -15,3 +16,15 @@ def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *, scale,
     return paged_attention(q, k_pages, v_pages, block_tables, lengths,
                            scale=scale, window=window, softcap=softcap,
                            interpret=interpret)
+
+
+def paged_attention_auto(q, k_pages, v_pages, block_tables, lengths, *, scale,
+                         window=0, softcap=0.0):
+    """Backend dispatch used inside the model's paged-decode forward: the
+    Pallas TPU kernel on TPU, the pure-jnp oracle elsewhere (CPU CI boxes).
+    Traceable either way — the choice is made at trace time."""
+    if jax.default_backend() == "tpu":
+        return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               scale=scale, window=window, softcap=softcap)
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               scale=scale, window=window, softcap=softcap)

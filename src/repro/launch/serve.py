@@ -25,13 +25,23 @@ def main(argv=None):
     ap.add_argument("--qps", type=float, default=2.0)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--max-budget", type=int, default=512)
+    ap.add_argument("--cache-mode", default="auto",
+                    choices=["auto", "slot", "paged"],
+                    help="paged = block-table KV (production layout); "
+                         "slot = contiguous rows (recurrent/MLA archs)")
+    ap.add_argument("--kv-tokens", type=int, default=4096,
+                    help="paged KV capacity in tokens")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     sched = SlidingServeScheduler(max_budget=args.max_budget, max_iter_time=2.0)
-    engine = ServingEngine(cfg, sched, max_slots=4, max_len=512)
+    engine = ServingEngine(cfg, sched, cache_mode=args.cache_mode,
+                           max_slots=4, max_len=512,
+                           kv_capacity_tokens=args.kv_tokens,
+                           page_size=args.page_size)
     rng = np.random.default_rng(0)
     inter = rng.exponential(1.0 / args.qps, args.requests)
     arrivals = np.cumsum(inter)
@@ -41,8 +51,11 @@ def main(argv=None):
                     ttft_slo=30.0, tbt_slo=30.0)
             for i in range(args.requests)]
     out = engine.serve(reqs, max_wall_s=300.0)
-    print(f"finished {len(out['finished'])}/{len(reqs)}; "
-          f"iterations={out['stats'].iterations} wall={out['wall']:.1f}s")
+    st = out["stats"]
+    print(f"finished {len(out['finished'])}/{len(reqs)} "
+          f"[{engine.cache_mode} cache]; iterations={st.iterations} "
+          f"max_concurrency={st.max_concurrency} evictions={st.evictions} "
+          f"wall={out['wall']:.1f}s")
     for r in out["finished"]:
         print(f"  req {r.rid}: ttft={(r.first_token_time - r.arrival):.2f}s "
               f"out={out['outputs'][r.rid]}")

@@ -1,5 +1,7 @@
 from repro.models.model import (  # noqa: F401
     build_model,
     init_cache,
+    init_paged_cache,
     init_params,
+    supports_paged_cache,
 )

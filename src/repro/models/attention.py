@@ -273,6 +273,41 @@ def mla_decode_attention(
     return out.astype(q_lat.dtype)
 
 
+def gather_pages(
+    pages: jnp.ndarray,         # [Hkv, P, ps, D] physical pages
+    block_tables: jnp.ndarray,  # [R, n] int32 logical->physical page map
+) -> jnp.ndarray:
+    """Materialize each row's logical KV view: returns [R, n*ps, Hkv, D].
+
+    The result has exactly the contiguous ``[B, S, Hkv, D]`` layout the
+    chunk-attention path consumes, so paged prefill reuses the same math as
+    the slot cache; positions past a row's valid length are masked by the
+    caller (they may alias freed or trash pages).
+    """
+    g = pages[:, block_tables]                      # [Hkv, R, n, ps, D]
+    Hkv, R, n, ps, D = g.shape
+    return g.transpose(1, 2, 3, 0, 4).reshape(R, n * ps, Hkv, D)
+
+
+def write_pages(
+    pages: jnp.ndarray,  # [Hkv, P, ps, D]
+    new: jnp.ndarray,    # [R, L, Hkv, D] new keys/values (row-major tokens)
+    slots: jnp.ndarray,  # [R*L] int32 flat destinations (page*ps + offset)
+) -> jnp.ndarray:
+    """Scatter new tokens into physical pages via a vLLM-style slot mapping.
+
+    Padding tokens must be routed to a trash slot by the caller (the engine
+    reserves the last physical page for this); duplicate trash indices are
+    harmless — last write wins and the page is never read.
+    """
+    Hkv, P, ps, D = pages.shape
+    flat = pages.reshape(Hkv, P * ps, D)
+    upd = new.reshape(-1, Hkv, D).transpose(1, 0, 2)   # [Hkv, R*L, D]
+    flat = flat.at[:, slots].set(upd.astype(flat.dtype), mode="drop",
+                                 unique_indices=False)
+    return flat.reshape(Hkv, P, ps, D)
+
+
 def update_kv_cache(
     cache: jnp.ndarray,  # [B, S, ...]
     new: jnp.ndarray,    # [B, n, ...]

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -238,6 +238,53 @@ def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=None, enc_len: int 
     return out
 
 
+# ---- paged cache (block-table KV; serving engine's production layout) -------
+class PagedView(NamedTuple):
+    """Per-call paged-cache addressing (traced operands, shared by all layers).
+
+    ``block_tables``: [R, n] logical->physical page map per batch row.
+    ``write_slots``:  [R*L] flat destination slot (page*page_size + offset)
+    for every token in the call, row-major; padding tokens point at the
+    reserved trash page.
+    """
+
+    block_tables: jnp.ndarray
+    write_slots: jnp.ndarray
+
+
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Paged KV covers pure-attention decoders (ATTN/LOCAL_ATTN mixers).
+    Recurrent mixers keep O(1) per-request state (nothing to page) and MLA /
+    enc-dec have bespoke cache shapes — those archs stay on the slot cache."""
+    # (first_k_dense stacks reuse layer_pattern[0] as their mixer — see
+    # build_stacks — so checking the pattern set covers them too)
+    return not cfg.enc_dec and set(cfg.layer_pattern) <= {ATTN, LOCAL_ATTN}
+
+
+def _slot_paged_cache(cfg: ModelConfig, mixer: str, num_pages: int,
+                      page_size: int, dtype) -> Params:
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if mixer in (ATTN, LOCAL_ATTN):
+        return {"k_pages": jnp.zeros((Hkv, num_pages, page_size, Dh), dtype),
+                "v_pages": jnp.zeros((Hkv, num_pages, page_size, Dh), dtype)}
+    raise ValueError(f"paged cache does not support mixer {mixer!r}")
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype=None) -> Params:
+    """Physical page pools, one [Hkv, num_pages, page_size, Dh] pair per
+    layer (leaves stacked [reps, ...] like ``init_cache``). ``num_pages``
+    includes any trash page the caller reserves; there is no batch axis —
+    concurrency is bounded by pages, not rows."""
+    dtype = dtype or cfg.dtype
+    out = []
+    for period, reps in build_stacks(cfg):
+        per_rep = [[_slot_paged_cache(cfg, mixer, num_pages, page_size, dtype)
+                    for mixer, _ in period] for _ in range(reps)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    return out
+
+
 # =============================================================================
 # blocks
 # =============================================================================
@@ -270,12 +317,16 @@ def _attn_scale(cfg: ModelConfig) -> float:
 
 
 def _positions(mode, pos, lengths, Sq):
-    if mode == "decode" and lengths is not None and jnp.ndim(lengths):
+    if mode in ("decode", "paged_decode") and lengths is not None and jnp.ndim(lengths):
         return (jnp.asarray(lengths) - 1)[:, None]          # [B, 1] per-request
+    pos_arr = jnp.asarray(pos)
+    if jnp.ndim(pos_arr):                                   # [B] per-row offsets
+        return pos_arr[:, None] + jnp.arange(Sq)[None, :]   # [B, Sq] ragged chunk
     return (pos + jnp.arange(Sq))[None, :]                  # [1, Sq] lockstep
 
 
-def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window):
+def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window,
+               paged=None):
     """Returns (y, new_state)."""
     B, Sq, _ = x.shape
     xin = _norm(x, p["ln"], cfg.norm_eps)
@@ -302,6 +353,27 @@ def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window):
         v_all = A.update_kv_cache(state["v"], v, pos)
         new_state = dict(state, k=k_all, v=v_all)
         o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
+    elif mode == "paged_chunk":
+        # fused ragged prefill: scatter the chunk's KV into physical pages
+        # (vLLM slot mapping; padding rows target the trash page), then gather
+        # each row's logical view and reuse the chunk-attention math.
+        kp = A.write_pages(state["k_pages"], k, paged.write_slots)
+        vp = A.write_pages(state["v_pages"], v, paged.write_slots)
+        new_state = dict(state, k_pages=kp, v_pages=vp)
+        k_all = A.gather_pages(kp, paged.block_tables)
+        v_all = A.gather_pages(vp, paged.block_tables)
+        o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
+    elif mode == "paged_decode":
+        from repro.kernels.paged_attention.ops import paged_attention_auto
+        kp = A.write_pages(state["k_pages"], k, paged.write_slots)
+        vp = A.write_pages(state["v_pages"], v, paged.write_slots)
+        new_state = dict(state, k_pages=kp, v_pages=vp)
+        H, Dh = cfg.num_heads, cfg.resolved_head_dim
+        o = paged_attention_auto(q[:, 0].reshape(B, H, Dh), kp, vp,
+                                 paged.block_tables, jnp.asarray(lengths),
+                                 scale=scale, window=window,
+                                 softcap=cfg.attn_logit_softcap)
+        o = o.reshape(B, q.shape[2], q.shape[3], Dh)[:, None]
     elif mode == "decode":
         if jnp.ndim(lengths):
             k_all = A.update_kv_cache_ragged(state["k"], k, lengths - 1)
@@ -326,21 +398,22 @@ def _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window, scale=None):
     pruning (the engine buckets the cache length instead).
     """
     B, Sq = q.shape[0], q.shape[1]
-    vl = lengths if lengths is not None else pos + Sq
     # q_offset enters only through position masks -> fold into kv_valid mask:
     # row t may see keys < pos + t + 1. Implement via per-row valid length.
     # blockwise_attention supports causal masking with integer q_offset only,
     # so use a non-causal call with explicit row-wise masking in one pass.
+    # ``pos`` may be a scalar (lockstep chunk) or a [B] vector (fused ragged
+    # chunk batch: each row prefills at its own offset).
     scale = scale if scale is not None else _attn_scale(cfg)
     Hkv, G = q.shape[2], q.shape[3]
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_all, preferred_element_type=jnp.float32) * scale
     s = softcap(s, cfg.attn_logit_softcap) if cfg.attn_logit_softcap else s
     Sk = k_all.shape[1]
     k_pos = jnp.arange(Sk)
-    q_pos = pos + jnp.arange(Sq)
-    mask = (k_pos[None, :] <= q_pos[:, None])[None]          # [1, Sq, Sk]
+    q_pos = jnp.asarray(pos).reshape(-1, 1) + jnp.arange(Sq)[None, :]  # [B|1, Sq]
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]         # [B|1, Sq, Sk]
     if window and window > 0:
-        mask = mask & (q_pos[:, None] - k_pos[None, :] < window)[None]
+        mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
     if lengths is not None and jnp.ndim(lengths):
         mask = mask & (k_pos[None, None, :] < jnp.asarray(lengths).reshape(-1, 1, 1))
     mask = mask[:, None, None]                               # [B|1, 1, 1, Sq, Sk]
@@ -447,12 +520,14 @@ def _ffn_apply(cfg, rctx, slot, x):
     return None, jnp.zeros((), jnp.float32)
 
 
-def apply_slot(cfg, rctx, slot, kinds, x, state, enc_out, *, mode, pos, lengths):
+def apply_slot(cfg, rctx, slot, kinds, x, state, enc_out, *, mode, pos, lengths,
+               paged=None):
     mixer, ffn = kinds
     if mixer in (ATTN, LOCAL_ATTN):
         window = cfg.sliding_window if mixer == LOCAL_ATTN else 0
         y, new_state = attn_block(cfg, rctx, slot["attn"], x, state,
-                                  mode=mode, pos=pos, lengths=lengths, window=window)
+                                  mode=mode, pos=pos, lengths=lengths,
+                                  window=window, paged=paged)
     elif mixer == MLA:
         y, new_state = mla_block(cfg, rctx, slot["mla"], x, state,
                                  mode=mode, pos=pos, lengths=lengths)
@@ -499,7 +574,7 @@ def _remat_wrap(rctx, fn):
 
 
 def apply_stack(cfg, rctx, stack_params, period, x, cache, enc_out, *,
-                mode, pos, lengths):
+                mode, pos, lengths, paged=None):
     """Scan the stack. cache may be None (train). Returns (x, new_cache, aux)."""
     has_cache = cache is not None
 
@@ -512,7 +587,8 @@ def apply_stack(cfg, rctx, stack_params, period, x, cache, enc_out, *,
         new_c = []
         for i, kinds in enumerate(period):
             x, st, a = apply_slot(cfg, rctx, p_rep[i], kinds, x, c_rep[i],
-                                  enc_out, mode=mode, pos=pos, lengths=lengths)
+                                  enc_out, mode=mode, pos=pos, lengths=lengths,
+                                  paged=paged)
             new_c.append(st)
             aux = aux + a
         return (x, aux), (new_c if has_cache else None)
@@ -554,7 +630,7 @@ def _run_encoder(cfg, rctx, params, enc_embeds):
 
 def forward(cfg: ModelConfig, params: Params, tokens, *, rctx: RunCtx,
             cache=None, mode: str = "train", pos=0, lengths=None,
-            extra_embeds=None, enc_embeds=None):
+            extra_embeds=None, enc_embeds=None, paged=None):
     """Unified forward. Returns (hidden [B,S,d], new_cache, aux, enc_out)."""
     enc_out = None
     if cfg.enc_dec:
@@ -567,7 +643,8 @@ def forward(cfg: ModelConfig, params: Params, tokens, *, rctx: RunCtx,
     for i, (period, reps) in enumerate(stacks):
         c = cache[i] if cache is not None else None
         x, new_c, aux = apply_stack(cfg, rctx, params["stacks"][i], period, x, c,
-                                    enc_out, mode=mode, pos=pos, lengths=lengths)
+                                    enc_out, mode=mode, pos=pos, lengths=lengths,
+                                    paged=paged)
         new_stacks.append(new_c)
         aux_total = aux_total + aux
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -663,6 +740,34 @@ def chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache, pos, *,
         sel = jnp.take_along_axis(
             x, jnp.asarray(logits_at).reshape(-1, 1, 1), axis=1)[:, 0]
     return _head(cfg, params, sel), new_cache
+
+
+def paged_chunk_step(cfg: ModelConfig, params: Params, tokens, cache, row_pos, *,
+                     rctx: RunCtx, row_lens, block_tables, write_slots,
+                     logits_at):
+    """Fused ragged chunked-prefill step over the paged cache.
+
+    One dispatch advances *every* prefill row in the decision: ``tokens``
+    [R, L] holds each request's chunk (bucket-padded), ``row_pos`` [R] its
+    cache offset, ``row_lens`` [R] its post-chunk valid length, ``logits_at``
+    [R] the index of its last real token. Returns (logits [R, V], cache)."""
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="paged_chunk", pos=row_pos, lengths=row_lens,
+                                 paged=PagedView(block_tables, write_slots))
+    sel = jnp.take_along_axis(
+        x, jnp.asarray(logits_at).reshape(-1, 1, 1), axis=1)[:, 0]
+    return _head(cfg, params, sel), new_cache
+
+
+def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache, *,
+                      rctx: RunCtx, lengths, block_tables, write_slots):
+    """One decode step for a ragged row batch over the paged cache (the
+    paged_attention kernel on TPU, its jnp oracle elsewhere). ``lengths`` [R]
+    counts each row's tokens *including* the one being written."""
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="paged_decode", pos=0, lengths=lengths,
+                                 paged=PagedView(block_tables, write_slots))
+    return _head(cfg, params, x[:, -1]), new_cache
 
 
 def build_model(cfg: ModelConfig, rctx: Optional[RunCtx] = None):

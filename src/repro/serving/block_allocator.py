@@ -1,15 +1,23 @@
 """Paged KV-cache block allocator (vLLM-style, §4 substrate).
 
 Token storage is paged into fixed-size blocks; requests own block lists that
-grow as prefill/decode advances. The allocator is the serving engine's and
-simulator's admission/ preemption authority: a request is admitted only when
-its full prompt plus a decode reserve fits, and decode growth failures trigger
-eviction of the lowest-priority owner (recompute-on-resume policy).
+grow as prefill/decode advances. The allocator is the *single* admission /
+preemption authority shared by the real ``ServingEngine`` and the analytic
+``ServingSimulator``: a request is admitted only when its full prompt plus a
+decode reserve fits, growth happens per emitted/prefilled token, and decode
+growth failures trigger eviction of the lowest-priority owner
+(recompute-on-resume policy, ``pick_victim``).
+
+Beyond pure accounting the allocator hands out *physical page ids* from a
+free list; the engine turns an owner's ``page_ids`` into the block table rows
+the paged attention kernels consume. The analytic simulator ignores the ids
+and uses only the counting API — both views are kept consistent by
+``check_invariants``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -17,6 +25,7 @@ class _Owner:
     rid: int
     blocks: int
     tokens: int
+    page_ids: List[int] = dataclasses.field(default_factory=list)
 
 
 class BlockAllocator:
@@ -25,7 +34,10 @@ class BlockAllocator:
         self.block_size = block_size
         self.num_blocks = capacity_tokens // block_size
         self.free_blocks = self.num_blocks
+        # LIFO free list of physical page ids (reuse-hot pages first)
+        self._free_ids: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.owners: Dict[int, _Owner] = {}
+        self.evictions = 0            # lifetime eviction count (KV pressure)
 
     # ---- queries --------------------------------------------------------------
     def blocks_for(self, tokens: int) -> int:
@@ -37,8 +49,19 @@ class BlockAllocator:
     def used_tokens(self) -> int:
         return sum(o.tokens for o in self.owners.values())
 
+    def free_tokens(self) -> int:
+        """Upper bound on new tokens storable without eviction (whole free
+        pages plus the tail slack of each owner's last page)."""
+        slack = sum(o.blocks * self.block_size - o.tokens
+                    for o in self.owners.values())
+        return self.free_blocks * self.block_size + slack
+
     def utilization(self) -> float:
         return 1.0 - self.free_blocks / self.num_blocks
+
+    def page_table(self, rid: int) -> List[int]:
+        """Physical page ids backing ``rid`` in logical order."""
+        return list(self.owners[rid].page_ids)
 
     # ---- lifecycle --------------------------------------------------------------
     def admit(self, rid: int, initial_tokens: int = 0) -> bool:
@@ -46,7 +69,8 @@ class BlockAllocator:
         need = self.blocks_for(initial_tokens) if initial_tokens else 0
         if need > self.free_blocks:
             return False
-        self.owners[rid] = _Owner(rid, need, initial_tokens)
+        ids = [self._free_ids.pop() for _ in range(need)]
+        self.owners[rid] = _Owner(rid, need, initial_tokens, ids)
         self.free_blocks -= need
         return True
 
@@ -58,6 +82,7 @@ class BlockAllocator:
         need = self.blocks_for(new_tokens) - o.blocks
         if need > self.free_blocks:
             return False
+        o.page_ids.extend(self._free_ids.pop() for _ in range(need))
         o.blocks += need
         o.tokens = new_tokens
         self.free_blocks -= need
@@ -67,11 +92,36 @@ class BlockAllocator:
         o = self.owners.pop(rid, None)
         if o is not None:
             self.free_blocks += o.blocks
+            self._free_ids.extend(reversed(o.page_ids))
+
+    # ---- preemption policy ------------------------------------------------------
+    def pick_victim(self, needy_rid: int,
+                    priority: Callable[[int], float]) -> Optional[int]:
+        """Lowest-priority owner (largest ``priority(rid)`` key) other than
+        the needy request — the shared evict-and-recompute policy. Callers
+        pass e.g. ``priority=arrival_of`` so the newest request is relegated
+        first (vLLM recompute order)."""
+        cands = [rid for rid in self.owners if rid != needy_rid]
+        if not cands:
+            return None
+        return max(cands, key=priority)
+
+    def evict(self, rid: int) -> None:
+        """Free a victim's pages and count the eviction."""
+        assert rid in self.owners, f"evicting non-owner {rid}"
+        self.free(rid)
+        self.evictions += 1
 
     # ---- invariants (property-tested) -------------------------------------------
     def check_invariants(self) -> None:
         used = sum(o.blocks for o in self.owners.values())
         assert used + self.free_blocks == self.num_blocks, "block leak"
         assert self.free_blocks >= 0, "overcommit"
+        assert len(self._free_ids) == self.free_blocks, "id-list drift"
+        held = [pid for o in self.owners.values() for pid in o.page_ids]
+        assert all(len(o.page_ids) == o.blocks for o in self.owners.values()), \
+            "owner id/block mismatch"
+        assert len(set(held)) == len(held), "page double-owned"
+        assert not (set(held) & set(self._free_ids)), "page both free and owned"
         for o in self.owners.values():
             assert o.blocks * self.block_size >= o.tokens, "owner under-allocated"

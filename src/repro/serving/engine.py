@@ -1,65 +1,152 @@
 """Real-execution serving engine: SlidingServe driving actual JAX forwards.
 
 This is the end-to-end integration of the paper's scheduler with the model
-substrate: continuous batching over a slot-based KV cache, chunked prefill
-via ``chunk_prefill_step`` (shape-bucketed so JIT caches stay warm), lockstep
-ragged decode via ``decode_step``, wall-clock latencies feeding the online
-predictor. On CPU it serves the reduced-config models (the examples use it);
-on TPU the same loop drives the sharded step functions with the Pallas
-kernels underneath.
+substrate. Two cache designs share one serve loop:
+
+* **paged** (default where the arch allows) — the production layout. KV lives
+  in physical pages handed out by :class:`BlockAllocator`, which is the
+  single admission/preemption authority (admit on free blocks, grow per
+  emitted token, evict-and-recompute the lowest-priority owner when decode
+  growth fails). A scheduler ``Decision`` executes as at most **two** fused
+  JIT dispatches regardless of how many requests it names: one ragged
+  chunked-prefill batch (every prefill row at its own offset, vLLM-style
+  slot-mapped page writes) and one ragged decode batch (``paged_attention``
+  Pallas kernel on TPU, its jnp oracle on CPU). Concurrency is bounded by KV
+  pages, not by a slot count, and KV pressure (`utilization`, evictions) is
+  surfaced to ``SchedulerBase.schedule/observe`` so chunk budgets back off
+  before allocation failures.
+* **slot** (fallback for recurrent/MLA/enc-dec archs whose per-request state
+  is not paged) — contiguous ``max_slots x max_len`` rows, per-request
+  chunked prefill and lockstep ragged decode, as in the original engine.
+
+Wall-clock latencies feed the online predictor in both modes. On CPU the
+engine serves the reduced-config models (the examples use it); on TPU the
+same loop drives the sharded step functions with the Pallas kernels
+underneath.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core.scheduler import SchedulerBase
+from repro.configs.base import MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.core.scheduler import KVPressure, SchedulerBase
 from repro.models.model import (RunCtx, chunk_prefill_step, decode_step,
-                                init_cache, init_params)
+                                init_cache, init_paged_cache, init_params,
+                                paged_chunk_step, paged_decode_step,
+                                supports_paged_cache)
+from repro.serving.block_allocator import BlockAllocator
 from repro.serving.request import ReqState, Request
 
+# chunk-length ladder for JIT shape bucketing; allocations above the top rung
+# are split across dispatches instead of being silently truncated.
+CHUNK_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
-def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512)) -> int:
+
+def _bucket(n: int, buckets=CHUNK_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
     return buckets[-1]
 
 
+def _pow2(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class EngineStats:
     iterations: int = 0
-    prefill_calls: int = 0
+    prefill_calls: int = 0        # fused chunk dispatches (paged) / per-req (slot)
     decode_calls: int = 0
     compiled_shapes: int = 0
+    evictions: int = 0
+    max_concurrency: int = 0      # peak simultaneously-admitted requests
+    max_round_calls: int = 0      # peak model dispatches in one scheduler round
 
 
 class ServingEngine:
-    """Slot-based continuous batching engine executing a real model."""
+    """Continuous-batching engine executing a real model.
+
+    ``cache_mode``: ``"paged"`` | ``"slot"`` | ``"auto"`` (paged where the
+    architecture supports it — see ``supports_paged_cache``).
+    """
 
     def __init__(self, cfg: ModelConfig, scheduler: SchedulerBase, *,
+                 cache_mode: str = "auto",
                  max_slots: int = 8, max_len: int = 512,
+                 kv_capacity_tokens: Optional[int] = None,
+                 page_size: int = 16, decode_reserve_tokens: int = 64,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
+        if cache_mode == "auto":
+            cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
+        if cache_mode == "paged" and not supports_paged_cache(cfg):
+            raise ValueError(
+                f"{cfg.name}: paged KV requires pure-attention mixers; "
+                f"use cache_mode='slot'")
+        self.cache_mode = cache_mode
         self.cfg = cfg
         self.sched = scheduler
         self.max_slots = max_slots
         self.max_len = max_len
         self.rctx = rctx or RunCtx(block_q=32, block_k=32, mlstm_block=32)
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.stats = EngineStats()
+        self._tokens_out: Dict[int, List[int]] = {}
+        self._seen_shapes = set()
+        self._resumed: set = set()    # evicted mid-decode; re-prefill, no emit
+        self._round_calls = 0
+        self._last_round_evictions = 0
+
+        if cache_mode == "paged":
+            capacity = kv_capacity_tokens or max_slots * max_len
+            self.alloc = BlockAllocator(capacity, page_size)
+            self.page_size = page_size
+            self.decode_reserve = decode_reserve_tokens
+            # one extra physical page (the last) is the trash page: padding
+            # tokens' KV writes land there and are never read back.
+            self.cache = init_paged_cache(cfg, self.alloc.num_blocks + 1,
+                                          page_size)
+            self._trash_slot = self.alloc.num_blocks * page_size
+            self._length: Dict[int, int] = {}     # tokens resident per rid
+            self._folded: Dict[int, int] = {}     # gen tokens folded on evict
+            rctx_ = self.rctx
+
+            def chunk_fused(params, tokens, cache, row_pos, row_lens, bt, ws,
+                            logits_at):
+                return paged_chunk_step(cfg, params, tokens, cache, row_pos,
+                                        rctx=rctx_, row_lens=row_lens,
+                                        block_tables=bt, write_slots=ws,
+                                        logits_at=logits_at)
+
+            def decode_fused(params, tokens, cache, lengths, bt, ws):
+                return paged_decode_step(cfg, params, tokens, cache,
+                                         rctx=rctx_, lengths=lengths,
+                                         block_tables=bt, write_slots=ws)
+
+            self._jit_chunk_fused = jax.jit(chunk_fused, donate_argnums=(2,))
+            self._jit_decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
+        else:
+            self._init_slot_mode(cfg, max_slots, max_len)
+
+    # =========================================================================
+    # slot mode (legacy contiguous rows; recurrent / MLA / enc-dec archs)
+    # =========================================================================
+    def _init_slot_mode(self, cfg: ModelConfig, max_slots: int, max_len: int):
+        rctx = self.rctx
         self.cache = init_cache(cfg, max_slots, max_len)
         self.lengths = np.zeros((max_slots,), np.int32)   # cached tokens/slot
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(max_slots))
-        self.stats = EngineStats()
         self._jit_chunk = {}
-        rctx = self.rctx
 
         def decode_merged(params, tokens, cache, lengths_p1, keep_mask):
             # run one decode step for every slot, then keep the updated cache
@@ -90,9 +177,7 @@ class ServingEngine:
             return logits, merged
 
         self._chunk_one = chunk_one
-        self._tokens_out: Dict[int, List[int]] = {}
 
-    # ---- slot management -----------------------------------------------------
     def _assign_slot(self, req: Request) -> Optional[int]:
         if req.rid in self.slot_of:
             return self.slot_of[req.rid]
@@ -103,12 +188,11 @@ class ServingEngine:
         self.lengths[s] = 0
         return s
 
-    def _release(self, req: Request) -> None:
+    def _release_slot(self, req: Request) -> None:
         s = self.slot_of.pop(req.rid, None)
         if s is not None:
             self.free_slots.append(s)
 
-    # ---- model execution -------------------------------------------------------
     def _chunk_fn(self, chunk_len: int):
         key = chunk_len
         if key not in self._jit_chunk:
@@ -118,33 +202,43 @@ class ServingEngine:
         return self._jit_chunk[key]
 
     def _run_prefill_chunk(self, req: Request, n: int,
-                           prompt_tokens: np.ndarray) -> None:
+                           prompt_tokens: np.ndarray) -> int:
+        """Execute up to ``n`` prompt tokens; returns tokens actually run.
+        Allocations above the top bucket are split across dispatches (never
+        silently truncated — the caller advances by the returned count)."""
         slot = self.slot_of[req.rid]
-        start = int(self.lengths[slot])
-        n = min(n, req.prompt_len - start)
-        from repro.configs.base import MAMBA, MLSTM, SLSTM
-        recurrent = any(k in (MAMBA, MLSTM, SLSTM) for k in self.cfg.layer_pattern)
-        # recurrent state advances per token, so padding tokens would pollute
-        # it — recurrent archs use exact-length chunks (more JIT shapes, fine)
-        blen = n if recurrent else _bucket(n)
-        n = min(n, blen)
-        chunk = np.zeros((1, blen), np.int32)
-        real = prompt_tokens[start:start + n]
-        chunk[0, :n] = real
-        # bucket padding: repeat the last real token (masked out afterwards by
-        # restoring the true length; attention past ``start+blen`` is causal)
-        if n < blen and n > 0:
-            chunk[0, n:] = real[-1]
-        fn = self._chunk_fn(blen)
-        logits, self.cache = fn(self.params, jnp.asarray(chunk), self.cache,
-                                start, slot, n - 1)
-        self.lengths[slot] = start + n
-        self.stats.prefill_calls += 1
-        if start + n >= req.prompt_len:
+        total = min(n, req.prompt_len - int(self.lengths[slot]))
+        recurrent = any(k in (MAMBA, MLSTM, SLSTM)
+                        for k in self.cfg.layer_pattern)
+        done = 0
+        while done < total:
+            start = int(self.lengths[slot])
+            step = min(total - done, CHUNK_BUCKETS[-1])
+            # recurrent state advances per token, so padding tokens would
+            # pollute it — recurrent archs use exact-length chunks (more JIT
+            # shapes, fine)
+            blen = step if recurrent else _bucket(step)
+            chunk = np.zeros((1, blen), np.int32)
+            real = prompt_tokens[start:start + step]
+            chunk[0, :step] = real
+            # bucket padding: repeat the last real token (masked out afterwards
+            # by restoring the true length; attention past ``start+blen`` is
+            # causal)
+            if step < blen and step > 0:
+                chunk[0, step:] = real[-1]
+            fn = self._chunk_fn(blen)
+            logits, self.cache = fn(self.params, jnp.asarray(chunk),
+                                    self.cache, start, slot, step - 1)
+            self.lengths[slot] = start + step
+            self.stats.prefill_calls += 1
+            self._round_calls += 1
+            done += step
+        if int(self.lengths[slot]) >= req.prompt_len and done > 0:
             tok = int(jnp.argmax(logits[0]))
             self._tokens_out.setdefault(req.rid, []).append(tok)
+        return done
 
-    def _run_decode(self, reqs: Sequence[Request]) -> None:
+    def _run_decode_slot(self, reqs: Sequence[Request]) -> None:
         tokens = np.zeros((self.max_slots, 1), np.int32)
         keep = np.zeros((self.max_slots,), bool)
         for r in reqs:
@@ -162,8 +256,175 @@ class ServingEngine:
             tok = int(jnp.argmax(logits[slot]))
             self._tokens_out.setdefault(r.rid, []).append(tok)
         self.stats.decode_calls += 1
+        self._round_calls += 1
 
-    # ---- main loop ----------------------------------------------------------------
+    # =========================================================================
+    # paged mode: allocator-backed admission / growth / eviction
+    # =========================================================================
+    def _kv_pressure(self) -> KVPressure:
+        """Snapshot for the scheduler; ``evictions`` reports the *previous*
+        round's churn (the signal to shrink the next budget).
+
+        Pressure is measured against tokens actually *written* to the cache,
+        not against block reservations: admission already reserves each
+        prompt, so reserved-but-uncomputed space is precisely what scheduled
+        prefill tokens consume — counting it as used would throttle chunk
+        budgets exactly when there is nothing to protect."""
+        capacity = self.alloc.num_blocks * self.page_size
+        computed = sum(self._length.get(rid, 0) for rid in self.alloc.owners)
+        return KVPressure(utilization=computed / capacity,
+                          free_tokens=capacity - computed,
+                          evictions=self._last_round_evictions)
+
+    def _evict(self, victim: Request, active: List[Request],
+               queued: List[Request],
+               prompts: Dict[int, np.ndarray]) -> None:
+        """Relegate ``victim`` (recompute-on-resume): drop its pages and fold
+        already-emitted tokens into its prompt so re-prefill reconstructs the
+        exact cache state and greedy decoding continues deterministically."""
+        self.alloc.evict(victim.rid)
+        self.stats.evictions += 1
+        gen = self._tokens_out.get(victim.rid, [])
+        if victim.generated > 0:
+            # cache held prompt + gen[:-1] (the newest token was emitted but
+            # not yet written back); that is exactly what re-prefill must
+            # rebuild. The final emitted token stays pending as the next
+            # decode input, so completion of the re-prefill must NOT emit.
+            # ``_folded`` guards repeat evictions: tokens already folded into
+            # the prompt by an earlier eviction must not be appended twice.
+            folded = self._folded.get(victim.rid, 0)
+            rebuild = np.asarray(gen[folded:victim.generated - 1], np.int32)
+            if len(rebuild):
+                prompts[victim.rid] = np.concatenate(
+                    [prompts[victim.rid], rebuild])
+                victim.prompt_len += len(rebuild)
+            self._folded[victim.rid] = victim.generated - 1
+            victim.recomputed = victim.generated - 1
+            self._resumed.add(victim.rid)
+        victim.prefilled = 0
+        victim.state = ReqState.WAITING
+        self._length.pop(victim.rid, None)
+        if victim in active:
+            active.remove(victim)
+        queued.append(victim)
+
+    def _grow_or_evict(self, req: Request, new_tokens: int,
+                       active: List[Request], queued: List[Request],
+                       prompts: Dict[int, np.ndarray],
+                       protected: set) -> bool:
+        """Grow ``req``'s allocation, evicting lowest-priority owners (newest
+        arrival first, preferring requests outside the current decision) until
+        it fits. Returns False if capacity is exhausted even after evicting
+        every other owner."""
+        by_rid = {r.rid: r for r in active}
+        while not self.alloc.grow(req.rid, new_tokens):
+            vid = self.alloc.pick_victim(
+                req.rid,
+                priority=lambda rid: (rid not in protected,
+                                      by_rid[rid].arrival if rid in by_rid else 0.0))
+            if vid is None or vid not in by_rid:
+                return False
+            self._evict(by_rid.pop(vid), active, queued, prompts)
+        return True
+
+    # ---- fused dispatch assembly ---------------------------------------------
+    def _page_slots(self, rid: int, positions: np.ndarray) -> np.ndarray:
+        pt = np.asarray(self.alloc.page_table(rid), np.int64)
+        return pt[positions // self.page_size] * self.page_size \
+            + positions % self.page_size
+
+    def _run_paged_prefill(self, entries: List[Tuple[Request, int]],
+                           prompts: Dict[int, np.ndarray]) -> None:
+        """One fused dispatch advancing every prefill row by its allocation
+        (rows above the top chunk bucket loop over extra dispatches)."""
+        work = [[r, int(self.lengths_of(r)), n] for r, n in entries]
+        while work:
+            batch = [(r, s, min(n, CHUNK_BUCKETS[-1])) for r, s, n in work]
+            self._dispatch_chunk_batch(batch, prompts)
+            nxt = []
+            for (r, s, n), (_, _, step) in zip(work, batch):
+                if n - step > 0:
+                    nxt.append([r, s + step, n - step])
+            work = nxt
+
+    def lengths_of(self, req: Request) -> int:
+        return self._length.get(req.rid, 0)
+
+    def _dispatch_chunk_batch(self, batch: List[Tuple[Request, int, int]],
+                              prompts: Dict[int, np.ndarray]) -> None:
+        R = len(batch)
+        Rb = _pow2(R)
+        Lb = _bucket(max(n for _, _, n in batch))
+        nb = _pow2(max(self.alloc.blocks_for(s + n) for _, s, n in batch))
+        tokens = np.zeros((Rb, Lb), np.int32)
+        row_pos = np.zeros((Rb,), np.int32)
+        row_lens = np.zeros((Rb,), np.int32)
+        logits_at = np.zeros((Rb,), np.int32)
+        tables = np.zeros((Rb, nb), np.int32)
+        slots = np.full((Rb, Lb), self._trash_slot, np.int64)
+        for i, (r, start, n) in enumerate(batch):
+            tokens[i, :n] = prompts[r.rid][start:start + n]
+            row_pos[i] = start
+            row_lens[i] = start + n
+            logits_at[i] = n - 1
+            # the owner may hold pages beyond this dispatch's read range (a
+            # split oversized chunk grows the whole allocation up front);
+            # only the prefix covering start+n tokens belongs in the table.
+            need = self.alloc.blocks_for(start + n)
+            tables[i, :need] = self.alloc.page_table(r.rid)[:need]
+            slots[i, :n] = self._page_slots(r.rid, np.arange(start, start + n))
+        self._note_shape(("chunk", Rb, Lb, nb))
+        logits, self.cache = self._jit_chunk_fused(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(row_pos), jnp.asarray(row_lens), jnp.asarray(tables),
+            jnp.asarray(slots.reshape(-1), dtype=jnp.int32),
+            jnp.asarray(logits_at))
+        self.stats.prefill_calls += 1
+        self._round_calls += 1
+        for i, (r, start, n) in enumerate(batch):
+            self._length[r.rid] = start + n
+            if start + n >= r.prompt_len:
+                if r.rid in self._resumed:
+                    continue          # token already emitted pre-eviction
+                tok = int(jnp.argmax(logits[i]))
+                self._tokens_out.setdefault(r.rid, []).append(tok)
+
+    def _run_paged_decode(self, reqs: Sequence[Request]) -> None:
+        R = len(reqs)
+        Rb = _pow2(R)
+        new_lens = [self._length[r.rid] + 1 for r in reqs]
+        nb = _pow2(max(self.alloc.blocks_for(L) for L in new_lens))
+        tokens = np.zeros((Rb, 1), np.int32)
+        lengths = np.zeros((Rb,), np.int32)
+        tables = np.zeros((Rb, nb), np.int32)
+        slots = np.full((Rb,), self._trash_slot, np.int64)
+        for i, r in enumerate(reqs):
+            prev = self._tokens_out.get(r.rid)
+            tokens[i, 0] = prev[-1] if prev else 0
+            lengths[i] = new_lens[i]
+            need = self.alloc.blocks_for(new_lens[i])
+            tables[i, :need] = self.alloc.page_table(r.rid)[:need]
+            slots[i] = self._page_slots(
+                r.rid, np.asarray([new_lens[i] - 1]))[0]
+        self._note_shape(("decode", Rb, nb))
+        logits, self.cache = self._jit_decode_fused(
+            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(lengths),
+            jnp.asarray(tables), jnp.asarray(slots, dtype=jnp.int32))
+        self.stats.decode_calls += 1
+        self._round_calls += 1
+        for i, r in enumerate(reqs):
+            self._length[r.rid] += 1
+            tok = int(jnp.argmax(logits[i]))
+            self._tokens_out.setdefault(r.rid, []).append(tok)
+
+    def _note_shape(self, key) -> None:
+        if key not in self._seen_shapes:
+            self._seen_shapes.add(key)
+            self.stats.compiled_shapes += 1
+
+    # =========================================================================
+    # main loop (shared by both cache modes)
+    # =========================================================================
     def serve(self, requests: Sequence[Request],
               prompts: Optional[Dict[int, np.ndarray]] = None,
               max_wall_s: float = 300.0) -> Dict:
@@ -173,58 +434,119 @@ class ServingEngine:
             r.rid: rng.integers(0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
             for r in requests
         }
+        # evict-and-recompute rebinds prompt entries (folding emitted tokens
+        # into the recompute prompt); copy so the caller's dict stays intact
+        prompts = dict(prompts)
+        paged = self.cache_mode == "paged"
         t0 = time.perf_counter()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        active: List[Request] = []
+        pending = sorted(requests, key=lambda r: r.arrival)   # not yet arrived
+        queued: List[Request] = []                            # arrived, no KV
+        active: List[Request] = []                            # KV-resident
         done: List[Request] = []
 
         def now() -> float:
             return time.perf_counter() - t0
 
-        while (pending or active) and now() < max_wall_s:
+        def admit() -> None:
             while pending and pending[0].arrival <= now():
-                r = pending.pop(0)
-                if self._assign_slot(r) is None:
-                    pending.insert(0, r)
-                    break
-                active.append(r)
+                queued.append(pending.pop(0))
+            still: List[Request] = []
+            for r in queued:
+                if paged:
+                    # admission *reserves* the full prompt + decode headroom
+                    # so concurrent admits are gated by the same free pool
+                    # (admit(rid, 0) would let every fitting prompt in at
+                    # once and convert admission control into evict thrash)
+                    ok = self.alloc.admit(
+                        r.rid, r.remaining_prefill() + self.decode_reserve)
+                else:
+                    ok = self._assign_slot(r) is not None
+                if ok:
+                    active.append(r)
+                    if paged:
+                        self._length[r.rid] = 0
+                else:
+                    still.append(r)
+            queued[:] = still
+            self.stats.max_concurrency = max(self.stats.max_concurrency,
+                                             len(active))
+
+        empty_rounds = 0
+        while (pending or queued or active) and now() < max_wall_s:
+            admit()
             if not active:
                 if pending:
                     time.sleep(max(pending[0].arrival - now(), 0.0) + 1e-4)
+                    continue
+                if queued:   # arrived but nothing fits: engine is wedged
+                    break
                 continue
 
-            prefilling = [r for r in active
-                          if r.state in (ReqState.WAITING, ReqState.PREFILLING)]
+            # admitted-but-unstarted requests are offered as ``waiting`` so
+            # MLPS ordering applies to them (they are executable immediately).
+            waiting = [r for r in active if r.state == ReqState.WAITING]
+            prefilling = [r for r in active if r.state == ReqState.PREFILLING]
             decoding = [r for r in active if r.state == ReqState.DECODING]
-            decision = self.sched.schedule(now(), [], prefilling, decoding)
+            kv = self._kv_pressure() if paged else None
+            decision = self.sched.schedule(now(), waiting, prefilling,
+                                           decoding, kv=kv)
             if decision is None:
                 time.sleep(1e-3)
                 continue
 
+            self._round_calls = 0
             it0 = time.perf_counter()
-            decode_reqs = [r for r, n in decision.alloc
-                           if r.state == ReqState.DECODING]
-            if decode_reqs:
-                self._run_decode(decode_reqs)
-            for r, n in decision.alloc:
-                if r.state != ReqState.DECODING:
-                    self._run_prefill_chunk(r, n, prompts[r.rid])
+            executed = (self._execute_paged(decision, active, queued, prompts)
+                        if paged else
+                        self._execute_slot(decision, prompts))
+            if not executed:
+                # every entry was evicted away (severe KV pressure): yield so
+                # re-admission can make progress — but if no eviction changed
+                # any state either, the engine is wedged (e.g. a lone request
+                # outgrew total capacity); bail instead of spinning to the
+                # wall clock.
+                empty_rounds += 1
+                if self._last_round_evictions == 0 and empty_rounds >= 8:
+                    break
+                time.sleep(1e-3)
+                continue
+            empty_rounds = 0
             latency = time.perf_counter() - it0
             t_now = now()
             self.stats.iterations += 1
+            self.stats.max_round_calls = max(self.stats.max_round_calls,
+                                             self._round_calls)
 
-            for r, n in decision.alloc:
+            executed_batch = []
+            for r, n, ctx in executed:
+                executed_batch.append((n, ctx))
                 if r.state == ReqState.DECODING:
                     r.emit_token(t_now)
                 else:
                     r.advance_prefill(n)
                     if r.remaining_prefill() == 0:
-                        r.emit_token(t_now)
+                        if r.rid in self._resumed:
+                            # re-prefill after eviction: the pending token was
+                            # already emitted; resume decoding silently.
+                            self._resumed.discard(r.rid)
+                            r.state = ReqState.DECODING
+                        else:
+                            r.emit_token(t_now)
                 if r.state == ReqState.FINISHED:
-                    self._release(r)
+                    if paged:
+                        self.alloc.free(r.rid)
+                        self._length.pop(r.rid, None)
+                        self._folded.pop(r.rid, None)
+                    else:
+                        self._release_slot(r)
                     active.remove(r)
                     done.append(r)
-            self.sched.observe(decision.batch(), latency)
+            # close the loop on what actually ran (post split/clamp), not on
+            # what the decision asked for.
+            self.sched.observe(executed_batch, latency,
+                               kv=self._kv_pressure() if paged else None)
+            if paged:
+                self.alloc.check_invariants()
 
         return {
             "finished": done,
@@ -233,3 +555,65 @@ class ServingEngine:
             "outputs": dict(self._tokens_out),
             "wall": now(),
         }
+
+    # ---- per-mode decision execution -----------------------------------------
+    def _execute_slot(self, decision, prompts) -> List[Tuple[Request, int, int]]:
+        executed = []
+        decode_reqs = [r for r, n in decision.alloc
+                       if r.state == ReqState.DECODING]
+        if decode_reqs:
+            self._run_decode_slot(decode_reqs)
+            executed += [(r, 1, r.context_len()) for r in decode_reqs]
+        for r, n in decision.alloc:
+            if r.state != ReqState.DECODING:
+                ctx = r.context_len()
+                n_exec = self._run_prefill_chunk(r, n, prompts[r.rid])
+                if n_exec > 0:
+                    executed.append((r, n_exec, ctx))
+        return executed
+
+    def _execute_paged(self, decision, active, queued, prompts
+                       ) -> List[Tuple[Request, int, int]]:
+        """Grow allocations (evicting under pressure), then run the decision
+        as one fused decode dispatch + one fused ragged prefill dispatch."""
+        protected = {r.rid for r, _ in decision.alloc}
+        ev0 = self.alloc.evictions
+
+        def is_live(r):  # an earlier grow may have evicted a later entry
+            return r.rid in self.alloc.owners
+
+        decode_rows: List[Request] = []
+        prefill_rows: List[Tuple[Request, int]] = []
+        for r, n in decision.alloc:
+            if not is_live(r):
+                continue
+            if r.state == ReqState.DECODING:
+                if self._grow_or_evict(r, self._length[r.rid] + 1, active,
+                                       queued, prompts, protected):
+                    decode_rows.append(r)
+            else:
+                n_exec = min(n, r.remaining_prefill())
+                if n_exec <= 0:
+                    continue
+                start = self._length.get(r.rid, 0)
+                # admission reserved the full remaining prompt, so this grow
+                # is a no-op today; it stays so a future partial-reservation
+                # admission policy still allocates (or skips) correctly.
+                if not self._grow_or_evict(r, start + n_exec, active, queued,
+                                           prompts, protected):
+                    continue
+                prefill_rows.append((r, n_exec))
+        decode_rows = [r for r in decode_rows if is_live(r)]
+        prefill_rows = [(r, n) for r, n in prefill_rows if is_live(r)]
+        self._last_round_evictions = self.alloc.evictions - ev0
+
+        executed: List[Tuple[Request, int, int]] = []
+        if decode_rows:
+            ctxs = {r.rid: r.context_len() for r in decode_rows}
+            self._run_paged_decode(decode_rows)
+            executed += [(r, 1, ctxs[r.rid]) for r in decode_rows]
+        if prefill_rows:
+            ctxs = {r.rid: r.context_len() for r, _ in prefill_rows}
+            self._run_paged_prefill(prefill_rows, prompts)
+            executed += [(r, n, ctxs[r.rid]) for r, n in prefill_rows]
+        return executed

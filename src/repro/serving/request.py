@@ -38,6 +38,8 @@ class Request:
     state: ReqState = ReqState.WAITING
     prefilled: int = 0               # c_i(t): prompt tokens already computed
     generated: int = 0               # output tokens emitted
+    recomputed: int = 0              # emitted tokens folded into the prompt by
+                                     # evict-and-recompute (still in generated)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
@@ -77,8 +79,10 @@ class Request:
 
     # ---- lifecycle ----------------------------------------------------------
     def context_len(self) -> int:
-        """u_i: tokens already computed & cached."""
-        return self.prefilled + self.generated
+        """u_i: tokens already computed & cached. Tokens an eviction folded
+        into the prompt would otherwise be counted by both ``prefilled`` and
+        ``generated``."""
+        return self.prefilled + self.generated - self.recomputed
 
     def is_decoding(self) -> bool:
         return self.state == ReqState.DECODING

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.scheduler import Decision, SchedulerBase
+from repro.core.scheduler import Decision, KVPressure, SchedulerBase
 from repro.serving.block_allocator import BlockAllocator
 from repro.serving.costmodel import CostModel
 from repro.serving.request import ReqState, Request
@@ -44,6 +44,7 @@ class ServingSimulator:
         self.decode_reserve = decode_reserve_tokens
         self.max_sim_time = max_sim_time
         self.collect_trace = collect_trace
+        self._last_round_evictions = 0
         if warmup_predictor:
             self._offline_calibration()
 
@@ -80,20 +81,34 @@ class ServingSimulator:
         while (pending or waiting or active) and t < self.max_sim_time:
             admit_arrivals(t)
 
-            # KV admission: move waiting -> active when the prompt + reserve fits.
+            # KV admission: move waiting -> active when the prompt + reserve
+            # fits; the blocks are *reserved* at admit time so concurrent
+            # admits are gated by the same free pool.
             still_waiting: List[Request] = []
             for r in waiting:
-                if self.alloc.can_admit(r.prompt_len, self.decode_reserve):
-                    assert self.alloc.admit(r.rid, 0)
+                if self.alloc.admit(r.rid,
+                                    r.remaining_prefill() + self.decode_reserve):
                     active.append(r)
                 else:
                     still_waiting.append(r)
             waiting = still_waiting
 
-            prefilling = [r for r in active if r.state in (ReqState.WAITING, ReqState.PREFILLING)]
+            # admitted-but-unstarted requests are offered as ``waiting`` so
+            # MLPS ordering applies to them; KV pressure lets the scheduler
+            # cap chunk budgets before growth failures force evictions.
+            wait_adm = [r for r in active if r.state == ReqState.WAITING]
+            prefilling = [r for r in active if r.state == ReqState.PREFILLING]
             decoding = [r for r in active if r.state == ReqState.DECODING]
+            # pressure tracks tokens actually computed, not reservations —
+            # reserved prompt space is what scheduled prefill consumes
+            capacity = self.alloc.num_blocks * self.alloc.block_size
+            computed = sum(r.context_len() for r in active)
+            kv = KVPressure(utilization=computed / capacity,
+                            free_tokens=capacity - computed,
+                            evictions=self._last_round_evictions)
 
-            decision = self.sched.schedule(t, [], prefilling, decoding)
+            decision = self.sched.schedule(t, wait_adm, prefilling, decoding,
+                                           kv=kv)
             if decision is None or not decision.alloc:
                 if pending:
                     t = max(t, pending[0].arrival)
@@ -109,11 +124,15 @@ class ServingSimulator:
                 trace.append((t, latency, sum(c for c, _ in batch)))
 
             finished: List[Request] = []
+            ev0 = self.alloc.evictions
             for req, n in decision.alloc:
+                if req.rid not in self.alloc.owners:
+                    continue   # evicted by an earlier entry's growth this round
                 if req.state == ReqState.DECODING:
                     if not self.alloc.grow(req.rid, req.context_len() + 1):
                         self._evict_for(req, active, waiting)
-                        self.alloc.grow(req.rid, req.context_len() + 1)
+                        if not self.alloc.grow(req.rid, req.context_len() + 1):
+                            continue   # capacity exhausted: token not served
                     req.emit_token(t)
                 else:
                     self.alloc.grow(req.rid, req.prefilled + n)
@@ -126,7 +145,12 @@ class ServingSimulator:
                 self.alloc.free(req.rid)
                 active.remove(req)
 
-            self.sched.observe(batch, latency)
+            self._last_round_evictions = self.alloc.evictions - ev0
+            computed = sum(r.context_len() for r in active)
+            self.sched.observe(batch, latency,
+                               kv=KVPressure(computed / capacity,
+                                             capacity - computed,
+                                             self._last_round_evictions))
             self.alloc.check_invariants()
 
         return SimResult(requests=list(self.workload), duration=t,
@@ -136,17 +160,22 @@ class ServingSimulator:
     # ---- preemption ---------------------------------------------------------------
     def _evict_for(self, needy: Request, active: List[Request],
                    waiting: List[Request]) -> None:
-        """Free blocks by relegating the newest non-needy decoding request
-        (vLLM recompute policy): its cache is dropped, prefill restarts."""
-        victims = sorted(
-            (r for r in active if r.rid != needy.rid and r.state == ReqState.DECODING),
-            key=lambda r: -r.arrival,
-        )
-        for v in victims:
-            self.alloc.free(v.rid)
+        """Free blocks by relegating the lowest-priority non-needy owner
+        (allocator ``pick_victim``: newest arrival first — the shared
+        vLLM-style recompute policy): its cache is dropped, prefill restarts."""
+        by_rid = {r.rid: r for r in active}
+        # always free at least one block (the caller's grow just failed);
+        # decode_reserve may be 0 or below the block size
+        target = max(self.decode_reserve, 1)
+        while self.alloc.free_blocks * self.alloc.block_size < target:
+            vid = self.alloc.pick_victim(
+                needy.rid, priority=lambda rid: by_rid[rid].arrival
+                if rid in by_rid else -1.0)
+            if vid is None or vid not in by_rid:
+                return
+            v = by_rid.pop(vid)
+            self.alloc.evict(v.rid)
             active.remove(v)
             v.state = ReqState.WAITING
             v.prefilled = 0
             waiting.append(v)
-            if self.alloc.free_blocks * self.alloc.block_size >= self.decode_reserve:
-                return

@@ -1,0 +1,85 @@
+"""Minimal random-sampling stand-in for ``hypothesis`` (used when the real
+package is not installed — this container ships without it).
+
+Implements just the surface the test suite uses: ``given`` with positional
+strategies, ``settings(max_examples=..., deadline=...)``, and the strategies
+``integers``, ``floats``, ``sampled_from``, ``tuples``, ``lists``. Examples
+are drawn from a seeded RNG, so runs are deterministic; shrinking and the
+database are (deliberately) not implemented. With real hypothesis installed,
+the test modules import it instead of this shim.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (import as ``st``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {example!r}") from e
+        runner._is_fallback_property_test = True
+        # hide the wrapped signature: pytest must not see the strategy
+        # parameters as fixtures (real hypothesis does the same)
+        del runner.__wrapped__
+        runner.__signature__ = inspect.Signature()
+        return runner
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -5,7 +5,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container ships without hypothesis: random-sampling shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.batch_constructor import batch_constructor, knapsack_01, value_fn
 from repro.core.features import batch_features, scene_of

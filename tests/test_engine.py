@@ -47,4 +47,7 @@ def test_engine_matches_offline_greedy(arch):
                                   eng.rctx)
         assert out["outputs"][r.rid] == expected, (
             f"rid={r.rid}: engine {out['outputs'][r.rid]} != offline {expected}")
-    assert eng.stats.iterations > 0 and eng.stats.prefill_calls >= len(reqs)
+    # paged mode fuses every prefill row in a decision into one dispatch, so
+    # the floor is 1 call; the slot cache pays one dispatch per request.
+    min_calls = 1 if eng.cache_mode == "paged" else len(reqs)
+    assert eng.stats.iterations > 0 and eng.stats.prefill_calls >= min_calls

@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container ships without hypothesis: random-sampling shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.forwarder import BatchForwarder
 from repro.core.sliding_chunker import sliding_chunker

@@ -60,9 +60,9 @@ def test_predictor_fidelity_on_live_trace():
     sched = SlidingServeScheduler(max_budget=4096)
     samples = []
     orig = sched.observe
-    def spy(batch, latency):
+    def spy(batch, latency, **kw):
         samples.append((list(batch), latency, cm.latency(batch, noisy=False)))
-        orig(batch, latency)
+        orig(batch, latency, **kw)
     sched.observe = spy
     ServingSimulator(sched, cm, wl, kv_capacity_tokens=512 * 1024).run()
     assert len(samples) > 300

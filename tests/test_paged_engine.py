@@ -1,0 +1,145 @@
+"""Paged serving engine tests: slot-vs-paged output equivalence, allocator
+eviction/recompute round-trip through the real engine, and the concurrency /
+dispatch-count acceptance properties of the fused mixed-batch design."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SlidingServeScheduler
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.engine import ServingEngine
+from repro.serving.request import ReqState, Request
+
+
+def _mk_requests(spec):
+    return [Request(rid=i, arrival=a, prompt_len=p, max_output=o,
+                    ttft_slo=900.0, tbt_slo=900.0)
+            for i, (a, p, o) in enumerate(spec)]
+
+
+def _serve(cfg, prompts, spec, **engine_kw):
+    reqs = _mk_requests(spec)
+    sched = SlidingServeScheduler(max_budget=256, max_iter_time=5.0)
+    eng = ServingEngine(cfg, sched, seed=0, **engine_kw)
+    out = eng.serve(reqs, {k: v.copy() for k, v in prompts.items()},
+                    max_wall_s=900.0)
+    return eng, out
+
+
+# ---------------------------------------------------------------------------
+# allocator page-id layer
+# ---------------------------------------------------------------------------
+def test_allocator_page_ids_and_victim_policy():
+    a = BlockAllocator(capacity_tokens=256, block_size=16)   # 16 pages
+    assert a.admit(1, 40) and a.admit(2, 40)                 # 3 pages each
+    t1, t2 = a.page_table(1), a.page_table(2)
+    assert len(t1) == 3 and len(t2) == 3 and not set(t1) & set(t2)
+    assert a.grow(1, 70)                                     # 5 pages
+    assert a.page_table(1)[:3] == t1                         # ids are stable
+    a.check_invariants()
+    # victim = lowest priority (largest key), never the needy request
+    assert a.pick_victim(1, priority=lambda rid: rid) == 2
+    assert a.pick_victim(2, priority=lambda rid: rid) == 1
+    a.evict(2)
+    assert a.evictions == 1 and 2 not in a.owners
+    a.free(1)
+    a.check_invariants()
+    assert a.free_blocks == a.num_blocks
+
+
+def test_allocator_free_tokens_counts_tail_slack():
+    a = BlockAllocator(capacity_tokens=160, block_size=16)   # 10 pages
+    assert a.admit(7, 20)    # 2 pages, 12 tokens of tail slack
+    assert a.free_tokens() == 8 * 16 + 12
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence + acceptance properties
+# ---------------------------------------------------------------------------
+def test_slot_vs_paged_same_greedy_tokens():
+    cfg = get_config("llama3.2-3b").smoke()
+    rng = np.random.default_rng(1)
+    spec = [(0.0, 24, 4), (0.0, 51, 4), (0.0, 37, 3)]
+    prompts = {i: rng.integers(1, cfg.vocab_size, p).astype(np.int32)
+               for i, (_, p, _) in enumerate(spec)}
+    _, out_slot = _serve(cfg, prompts, spec, cache_mode="slot",
+                         max_slots=4, max_len=512)
+    eng, out_paged = _serve(cfg, prompts, spec, cache_mode="paged",
+                            kv_capacity_tokens=2048)
+    assert not out_slot["unfinished"] and not out_paged["unfinished"]
+    assert out_slot["outputs"] == out_paged["outputs"]
+    assert eng.stats.evictions == 0
+
+
+def test_paged_concurrency_beyond_slot_ceiling():
+    """The paged engine admits strictly more concurrent requests than the
+    slot engine's max_slots=8 ceiling, and a scheduler round costs at most
+    two fused model dispatches no matter how many requests it names."""
+    cfg = get_config("llama3.2-3b").smoke()
+    rng = np.random.default_rng(2)
+    spec = [(0.0, int(rng.integers(16, 48)), 2) for _ in range(12)]
+    prompts = {i: rng.integers(1, cfg.vocab_size, p).astype(np.int32)
+               for i, (_, p, _) in enumerate(spec)}
+    eng, out = _serve(cfg, prompts, spec, cache_mode="paged",
+                      max_slots=8, kv_capacity_tokens=4096)
+    assert not out["unfinished"]
+    assert eng.stats.max_concurrency > 8
+    assert eng.stats.max_round_calls <= 2
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks  # all KV released
+
+
+def test_eviction_recompute_roundtrip():
+    """Saturate a tiny paged KV so decode growth must evict; the evicted
+    request recomputes (prompt + already-emitted tokens) and every request
+    still produces exactly the tokens an uncontended engine produces."""
+    cfg = get_config("llama3.2-3b").smoke()
+    rng = np.random.default_rng(3)
+    spec = [(0.0, 60, 6) for _ in range(4)]
+    prompts = {i: rng.integers(1, cfg.vocab_size, 60).astype(np.int32)
+               for i in range(4)}
+    # reference: ample capacity, no evictions
+    ref_eng, ref = _serve(cfg, prompts, spec, cache_mode="paged",
+                          kv_capacity_tokens=4096)
+    assert ref_eng.stats.evictions == 0 and not ref["unfinished"]
+    # contended: 4 x 60-token prompts round to exactly 16 pages; the 65th
+    # token of each stream needs a 5th page -> growth failure -> eviction
+    eng, out = _serve(cfg, prompts, spec, cache_mode="paged",
+                      kv_capacity_tokens=256, page_size=16,
+                      decode_reserve_tokens=0)
+    assert not out["unfinished"], \
+        f"unfinished after eviction: {[r.rid for r in out['unfinished']]}"
+    assert eng.stats.evictions > 0, "KV was never contended"
+    assert out["outputs"] == ref["outputs"], "recompute diverged from greedy"
+    for r in out["finished"]:
+        assert r.generated == 6 and len(out["outputs"][r.rid]) == 6
+    eng.alloc.check_invariants()
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks
+
+
+def test_oversized_allocation_splits_across_dispatches(monkeypatch):
+    """An allocation above the top chunk bucket is split across dispatches
+    (never silently truncated), and the split dispatches address only the
+    page-table prefix they read — regression for the table-width overflow."""
+    import repro.serving.engine as E
+    monkeypatch.setattr(E, "CHUNK_BUCKETS", (16, 32))
+    cfg = get_config("llama3.2-3b").smoke()
+    rng = np.random.default_rng(4)
+    spec = [(0.0, 100, 2)]
+    prompts = {0: rng.integers(1, cfg.vocab_size, 100).astype(np.int32)}
+    eng, out = _serve(cfg, prompts, spec, cache_mode="paged",
+                      kv_capacity_tokens=1024)
+    assert not out["unfinished"]
+    assert eng.stats.prefill_calls >= 4      # 100 tokens over a 32-token cap
+    _, ref = _serve(cfg, prompts, spec, cache_mode="slot",
+                    max_slots=2, max_len=512)
+    assert out["outputs"] == ref["outputs"]
+
+
+def test_paged_rejects_recurrent_arch():
+    cfg = get_config("xlstm-125m").smoke()
+    sched = SlidingServeScheduler(max_budget=128)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, sched, cache_mode="paged")
+    eng = ServingEngine(cfg, sched, cache_mode="auto", max_slots=2,
+                        max_len=128)
+    assert eng.cache_mode == "slot"

@@ -5,7 +5,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container ships without hypothesis: random-sampling shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs.bench_models import QWEN25_7B
 from repro.core import SlidingServeScheduler
