@@ -8,6 +8,8 @@ held-out trace slice.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import QUICK, emit
@@ -62,7 +64,54 @@ def main(quick: bool = QUICK) -> dict:
         emit(f"predictor/{name}/r2", f"{ev['r2']:.4f}", "vs noisy runtimes")
         emit(f"predictor/{name}/r2_clean", f"{ev_clean['r2']:.4f}", "paper: >0.99")
         emit(f"predictor/{name}/n_test", ev["n"], "")
+    results["microbench"] = microbench()
     return results
+
+
+def microbench(n: int = 4000, seed: int = 11) -> dict:
+    """Predictor-overhead guardrail: the vectorized bulk paths
+    (``predict_many`` / ``fit_offline``) must beat their per-sample loop
+    equivalents, and a single online ``observe`` must stay far below the
+    serve loop's per-round budget — the predictor must never re-enter the
+    hot loop as a host bottleneck."""
+    rng = np.random.default_rng(seed)
+    samples = []
+    for _ in range(n):
+        k = int(rng.integers(1, 9))
+        batch = [(int(rng.integers(0, 2)) if rng.random() < 0.6
+                  else int(rng.integers(2, 512)), int(rng.integers(0, 4096)))
+                 for _ in range(k)]
+        samples.append((batch, float(rng.random() * 0.1)))
+    p = BatchLatencyPredictor()
+    p.fit_offline(samples[: n // 2])
+
+    t0 = time.perf_counter()
+    yh_loop = np.asarray([p.predict(b) for b, _ in samples])
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    yh_vec = p.predict_many([b for b, _ in samples])
+    t_vec = time.perf_counter() - t0
+    assert np.allclose(yh_loop, yh_vec), "vectorized predict diverged"
+
+    t0 = time.perf_counter()
+    for b, y in samples[: n // 4]:
+        p.observe(b, y)
+    observe_us = (time.perf_counter() - t0) / (n // 4) * 1e6
+
+    emit("predictor/microbench/predict_loop_ms", f"{t_loop * 1e3:.1f}",
+         f"{n} samples, per-sample predict()")
+    emit("predictor/microbench/predict_vec_ms", f"{t_vec * 1e3:.1f}",
+         f"{n} samples, predict_many()")
+    emit("predictor/microbench/observe_us", f"{observe_us:.1f}",
+         "per online observation")
+    assert t_vec < t_loop, (
+        f"vectorized evaluate path lost to the loop: {t_vec:.4f}s >= "
+        f"{t_loop:.4f}s")
+    assert observe_us < 1000.0, (
+        f"observe() costs {observe_us:.0f}us/sample — predictor overhead is "
+        f"back in the hot loop")
+    return {"predict_loop_s": t_loop, "predict_vec_s": t_vec,
+            "observe_us": observe_us}
 
 
 if __name__ == "__main__":

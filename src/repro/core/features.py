@@ -46,3 +46,37 @@ def batch_features(batch: Sequence[Tuple[int, int]]) -> np.ndarray:
 
 def featurize(batch: Sequence[Tuple[int, int]]) -> Tuple[np.ndarray, str]:
     return batch_features(batch), scene_of(batch)
+
+
+def features_many(batches: Sequence[Sequence[Tuple[int, int]]]):
+    """Vectorized ``featurize`` over many batches.
+
+    Returns ``(X [N, NUM_FEATURES], scenes [N], csum [N])`` where ``csum`` is
+    each batch's total scheduled tokens (the cold-start predictor input).
+    Segment reductions (``bincount`` / ``maximum.at``) over the flattened
+    (c, u) pairs replace N python-level ``batch_features`` calls."""
+    n = len(batches)
+    X = np.zeros((n, NUM_FEATURES), dtype=np.float64)
+    scenes = np.full(n, "pure_decode", dtype=object)
+    csum = np.zeros(n, dtype=np.float64)
+    flat = [cu for b in batches for cu in b]
+    if not flat:
+        return X, scenes, csum
+    seg = np.repeat(np.arange(n), [len(b) for b in batches])
+    cu = np.asarray(flat, dtype=np.float64)
+    c, u = cu[:, 0], cu[:, 1]
+    P = c > 1
+    D = ~P
+    X[:, 0] = np.bincount(seg[P], weights=(c * (u + c))[P], minlength=n)
+    X[:, 1] = np.bincount(seg[P], weights=(c * c)[P], minlength=n)
+    X[:, 2] = np.bincount(seg, weights=u, minlength=n)
+    X[:, 3] = np.bincount(seg[D], minlength=n)
+    X[:, 4] = np.bincount(seg[D], weights=u[D], minlength=n)
+    X[:, 5] = np.bincount(seg[P], weights=c[P], minlength=n)
+    np.maximum.at(X[:, 6], seg[P], c[P])
+    has_p = np.bincount(seg[P], minlength=n) > 0
+    has_d = np.bincount(seg[D], minlength=n) > 0
+    scenes[has_p] = "pure_prefill"
+    scenes[has_p & has_d] = "mixed"
+    csum[:] = np.bincount(seg, weights=c, minlength=n)
+    return X, scenes, csum

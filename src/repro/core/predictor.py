@@ -19,7 +19,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.features import NUM_FEATURES, SCENES, batch_features, scene_of
+from repro.core.features import (NUM_FEATURES, SCENES, batch_features,
+                                 features_many, scene_of)
 
 
 @dataclasses.dataclass
@@ -40,12 +41,30 @@ class _SceneStats:
         self.xty = np.zeros(d)
         self.count = 0
         self.decay = decay
+        self._xa = np.ones(d)               # reused augmented-feature buffer
 
     def add(self, x: np.ndarray, y: float) -> None:
-        xa = np.concatenate([x, [1.0]])
-        self.xtx = self.decay * self.xtx + np.outer(xa, xa)
-        self.xty = self.decay * self.xty + xa * y
+        xa = self._xa
+        xa[:-1] = x
+        # in-place decay + rank-1 update: no per-observation allocations in
+        # the serve loop's observe() path
+        self.xtx *= self.decay
+        self.xtx += xa[:, None] * xa[None, :]
+        self.xty *= self.decay
+        self.xty += xa * y
         self.count += 1
+
+    def add_many(self, X: np.ndarray, y: np.ndarray) -> None:
+        """Batched accumulation, equivalent to ``add`` in sample order:
+        one decayed outer-product GEMM instead of n rank-1 updates."""
+        n = len(y)
+        if n == 0:
+            return
+        Xa = np.concatenate([X, np.ones((n, 1))], axis=1)
+        w = self.decay ** np.arange(n - 1, -1, -1.0)
+        self.xtx = (self.decay ** n) * self.xtx + (Xa * w[:, None]).T @ Xa
+        self.xty = (self.decay ** n) * self.xty + (Xa * w[:, None]).T @ y
+        self.count += n
 
     def solve(self, ridge: float) -> Optional[_LinModel]:
         if self.count == 0:
@@ -85,8 +104,22 @@ class BatchLatencyPredictor:
 
     # ---- offline init (paper: "offline-collected batch runtime data") -------
     def fit_offline(self, samples: Sequence[Tuple[Sequence[Tuple[int, int]], float]]):
-        for batch, y in samples:
-            self._accumulate(batch, y)
+        if not samples:
+            self._refit()
+            return
+        # batched accumulation: featurize once, then one decayed GEMM per
+        # scene (and one global) instead of per-sample rank-1 updates.
+        # Grouping by scene preserves each accumulator's sample order, so
+        # the sufficient statistics match the sequential path.
+        X, scenes, _ = features_many([b for b, _ in samples])
+        X = X * self.fscale
+        ys = np.asarray([y for _, y in samples], np.float64)
+        for s in SCENES:
+            idx = np.flatnonzero(scenes == s)
+            if len(idx):
+                self.stats[s].add_many(X[idx], ys[idx])
+        self.global_stats.add_many(X, ys)
+        self.observed += len(samples)
         self._refit()
 
     # ---- online path ---------------------------------------------------------
@@ -127,12 +160,33 @@ class BatchLatencyPredictor:
         return max(model.predict(x), 1e-6)
 
     # ---- evaluation (paper Table 5) -------------------------------------------
+    def predict_many(self, batches) -> np.ndarray:
+        """Vectorized ``predict``: one matrix-vector product per scene expert
+        instead of a Python-level dot per sample (keeps bulk evaluation off
+        the serve loop's critical path)."""
+        n = len(batches)
+        yh = np.zeros(n)
+        if n == 0:
+            return yh
+        X, scenes, csum = features_many(batches)
+        X = X * self.fscale
+        empty = np.asarray([not b for b in batches])
+        for s in SCENES:
+            idx = np.flatnonzero(scenes == s)
+            if not len(idx):
+                continue
+            model = self.models.get(s) or self.global_model
+            if model is None:
+                # cold start: crude proportional guess (see ``predict``)
+                yh[idx] = 1e-5 * (csum[idx] + 1.0)
+            else:
+                yh[idx] = np.maximum(X[idx] @ model.w + model.b, 1e-6)
+        yh[empty] = 0.0
+        return yh
+
     def evaluate(self, samples) -> dict:
-        ys, yh = [], []
-        for batch, y in samples:
-            ys.append(y)
-            yh.append(self.predict(batch))
-        ys, yh = np.asarray(ys), np.asarray(yh)
+        ys = np.asarray([y for _, y in samples], np.float64)
+        yh = self.predict_many([b for b, _ in samples])
         err = yh - ys
         ss_res = float(np.sum(err ** 2))
         ss_tot = float(np.sum((ys - ys.mean()) ** 2)) or 1e-12

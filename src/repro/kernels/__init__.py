@@ -11,6 +11,10 @@ Kernels:
   cache prefix + itself (the exact shape chunked prefill creates).
 - ``paged_attention`` — decode-time GQA attention over a block-table paged KV
   cache (scalar-prefetch indexed).
+- ``paged_prefill_attention`` — ragged chunked-prefill attention computed
+  *directly* over the paged KV (per-row block tables + offsets as
+  scalar-prefetch operands), eliminating the dense page gather the jnp path
+  needs.
 - ``mamba_scan`` — selective-state-space scan, chunked over sequence with a
   VMEM-carried state.
 - ``mlstm_chunkwise`` — xLSTM matrix-memory cell, chunkwise-parallel form.

@@ -1,0 +1,153 @@
+"""Paged-prefill (ragged chunked-prefill) attention Pallas TPU kernel.
+
+Each batch row is a *chunk* of a different request's prompt, sitting at its
+own cache offset ``row_pos[r]``, attending over that request's paged KV
+(physical pages of ``page_size`` tokens indexed through a per-row block
+table). This is the fused ragged mixed-batch shape the serving engine's
+scheduler emits; computing it directly over the block tables removes the
+dense ``gather_pages`` materialization (O(R*S*H*D) HBM traffic per layer)
+and the [R, H, G, Sq, Sk] score tensor of the jnp path.
+
+TPU adaptation (vs. the CUDA chunked-prefill kernels vLLM drives):
+
+* the block table, row offsets and row lengths are **scalar-prefetch**
+  operands — the K/V BlockSpec index maps translate (row, logical page) ->
+  physical page, so page gathers become ordinary prefetched VMEM tile loads
+  (no pointer chasing on the compute path).
+* grid ``(R, Hkv, num_q_tiles, num_pages)``; the page axis is innermost and
+  sequential, so the online-softmax state (m, l, acc) for a q tile rides in
+  VMEM scratch across pages; pages past ``ceil(len/page_size)`` or entirely
+  above the causal diagonal / below the sliding window skip their FLOPs with
+  ``pl.when``.
+* GQA without KV repetition: q is laid out ``[R, Hkv, Sq*G, D]`` (grouped
+  query heads interleaved per token), so each page is one
+  [bq*G, D] x [D, page_size] MXU matmul per kv head and every KV page is
+  streamed exactly once per (row, kv head).
+* fp32 softmax state; matmuls accumulate fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, len_ref,      # scalar prefetch: [R,n],[R],[R]
+            q_ref, k_ref, v_ref,           # [1,1,bq*G,D], [1,1,ps,D], [1,1,ps,D]
+            o_ref,                         # [1,1,bq*G,D]
+            m_ref, l_ref, acc_ref,         # VMEM scratch [bq*G],[bq*G],[bq*G,D]
+            *, scale: float, window: int, softcap: float,
+            page_size: int, num_pages: int, block_q: int, group: int):
+    r = pl.program_id(0)
+    qi = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[r]
+    pos = pos_ref[r]
+    pages_needed = (length + page_size - 1) // page_size
+    # causal pruning: q tile qi covers absolute positions
+    # [pos + qi*bq, pos + (qi+1)*bq); page j covers keys [j*ps, (j+1)*ps).
+    live = (j < pages_needed) & (j * page_size <= pos + (qi + 1) * block_q - 1)
+    if window > 0:
+        # window pruning: the lowest key any q row of this tile can see
+        live &= (j + 1) * page_size - 1 >= pos + qi * block_q - window + 1
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                                  # [bq*G, D]
+        k = k_ref[0, 0]                                  # [ps, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq*G, ps]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        q_pos = pos + qi * block_q + t
+        k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (k_pos <= q_pos) & (k_pos < length)
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == num_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(
+    q: jnp.ndarray,             # [R, Sq, Hkv, G, D] chunk queries
+    k_pages: jnp.ndarray,       # [Hkv, P_total, page_size, D]
+    v_pages: jnp.ndarray,       # [Hkv, P_total, page_size, D]
+    block_tables: jnp.ndarray,  # [R, num_pages] int32
+    row_pos: jnp.ndarray,       # [R] int32 cache offset per row
+    lengths: jnp.ndarray,       # [R] int32 post-chunk valid length per row
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns [R, Sq, Hkv, G, D] (same contract as the jnp oracle)."""
+    R, Sq, Hkv, G, D = q.shape
+    _, _, page_size, _ = k_pages.shape
+    num_pages = block_tables.shape[1]
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+
+    # [R, Hkv, Sq*G, D]: token t's G grouped heads are rows [t*G, (t+1)*G)
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(R, Hkv, Sq * G, D)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        page_size=page_size, num_pages=num_pages, block_q=block_q, group=G)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R, Hkv, nq, num_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q * G, D),
+                         lambda r, h, i, j, bt, pos, L: (r, h, i, 0)),
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda r, h, i, j, bt, pos, L: (h, bt[r, j], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda r, h, i, j, bt, pos, L: (h, bt[r, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q * G, D),
+                               lambda r, h, i, j, bt, pos, L: (r, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G,), jnp.float32),
+            pltpu.VMEM((block_q * G,), jnp.float32),
+            pltpu.VMEM((block_q * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Hkv, Sq * G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), row_pos.astype(jnp.int32),
+      lengths.astype(jnp.int32), qf, k_pages, v_pages)
+    return out.reshape(R, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)

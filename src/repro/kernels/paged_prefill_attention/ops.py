@@ -1,0 +1,35 @@
+"""Jitted public wrapper for the paged-prefill attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_prefill_attention.kernel import paged_prefill_attention
+from repro.kernels.paged_prefill_attention.ref import paged_prefill_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "block_q", "interpret"))
+def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, row_pos,
+                               lengths, *, scale, window=0, softcap=0.0,
+                               block_q=128, interpret=False):
+    return paged_prefill_attention(q, k_pages, v_pages, block_tables, row_pos,
+                                   lengths, scale=scale, window=window,
+                                   softcap=softcap, block_q=block_q,
+                                   interpret=interpret)
+
+
+def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
+                                 lengths, *, scale, window=0, softcap=0.0):
+    """Backend dispatch used inside the model's paged-chunk forward: the
+    Pallas TPU kernel on TPU (streams K/V pages once, no gathered k_all/v_all
+    and no dense [R,H,G,Sq,Sk] score tensor), the pure-jnp oracle elsewhere
+    (CPU CI boxes). Traceable either way — the choice is made at trace time."""
+    if jax.default_backend() == "tpu":
+        return paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                       row_pos, lengths, scale=scale,
+                                       window=window, softcap=softcap)
+    return paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                       row_pos, lengths, scale=scale,
+                                       window=window, softcap=softcap)

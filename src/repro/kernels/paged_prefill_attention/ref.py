@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the paged-prefill attention kernel.
+
+Matches the pre-kernel engine path bit-for-bit on CPU: gather each row's
+logical KV view from the physical pages (``gather_pages``) and run exactly
+the dense masked-softmax math the serving engine's ``_chunk_attend`` used,
+op for op. The Pallas kernel is validated against this oracle to fp32
+tolerance; the slot-vs-paged engine equivalence suite rides on the oracle
+being bit-identical to the legacy path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, gather_pages
+
+
+def paged_prefill_attention_ref(
+    q: jnp.ndarray,             # [R, Sq, Hkv, G, D] chunk queries
+    k_pages: jnp.ndarray,       # [Hkv, P, ps, D] physical pages
+    v_pages: jnp.ndarray,       # [Hkv, P, ps, D]
+    block_tables: jnp.ndarray,  # [R, n] logical->physical page map
+    row_pos: jnp.ndarray,       # [R] cache offset of each row's chunk
+    lengths: jnp.ndarray,       # [R] post-chunk valid kv length per row
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Returns [R, Sq, Hkv, G, D]. Row t of row r attends to key positions
+    ``k <= row_pos[r] + t`` (causal at the row's own offset), clipped to
+    ``k < lengths[r]`` and the sliding window; padding rows (lengths == 0)
+    produce garbage the caller discards."""
+    Sq = q.shape[1]
+    k_all = gather_pages(k_pages, block_tables)     # [R, n*ps, Hkv, D]
+    v_all = gather_pages(v_pages, block_tables)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_all,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    Sk = k_all.shape[1]
+    k_pos = jnp.arange(Sk)
+    q_pos = jnp.asarray(row_pos).reshape(-1, 1) + jnp.arange(Sq)[None, :]
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]          # [R, Sq, Sk]
+    if window and window > 0:
+        mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
+    mask = mask & (k_pos[None, None, :]
+                   < jnp.asarray(lengths).reshape(-1, 1, 1))
+    mask = mask[:, None, None]                                # [R,1,1,Sq,Sk]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_all.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)

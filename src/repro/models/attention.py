@@ -280,9 +280,11 @@ def gather_pages(
     """Materialize each row's logical KV view: returns [R, n*ps, Hkv, D].
 
     The result has exactly the contiguous ``[B, S, Hkv, D]`` layout the
-    chunk-attention path consumes, so paged prefill reuses the same math as
-    the slot cache; positions past a row's valid length are masked by the
-    caller (they may alias freed or trash pages).
+    chunk-attention path consumes; positions past a row's valid length are
+    masked by the caller (they may alias freed or trash pages). The TPU
+    serving hot path no longer materializes this buffer (the
+    ``paged_prefill_attention`` kernel streams pages straight from the block
+    table); it remains the gather for the CPU jnp oracles and tests.
     """
     g = pages[:, block_tables]                      # [Hkv, R, n, ps, D]
     Hkv, R, n, ps, D = g.shape

@@ -355,14 +355,19 @@ def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window,
         o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
     elif mode == "paged_chunk":
         # fused ragged prefill: scatter the chunk's KV into physical pages
-        # (vLLM slot mapping; padding rows target the trash page), then gather
-        # each row's logical view and reuse the chunk-attention math.
+        # (vLLM slot mapping; padding rows target the trash page), then attend
+        # directly over the block tables — no gathered k_all/v_all buffer and
+        # no dense [R,H,G,Sq,Sk] score tensor (Pallas kernel on TPU, its
+        # bit-identical jnp oracle on CPU).
+        from repro.kernels.paged_prefill_attention.ops import (
+            paged_prefill_attention_auto)
         kp = A.write_pages(state["k_pages"], k, paged.write_slots)
         vp = A.write_pages(state["v_pages"], v, paged.write_slots)
         new_state = dict(state, k_pages=kp, v_pages=vp)
-        k_all = A.gather_pages(kp, paged.block_tables)
-        v_all = A.gather_pages(vp, paged.block_tables)
-        o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
+        o = paged_prefill_attention_auto(
+            q, kp, vp, paged.block_tables, jnp.asarray(pos),
+            jnp.asarray(lengths), scale=scale, window=window,
+            softcap=cfg.attn_logit_softcap)
     elif mode == "paged_decode":
         from repro.kernels.paged_attention.ops import paged_attention_auto
         kp = A.write_pages(state["k_pages"], k, paged.write_slots)
@@ -742,6 +747,14 @@ def chunk_prefill_step(cfg: ModelConfig, params: Params, tokens, cache, pos, *,
     return _head(cfg, params, sel), new_cache
 
 
+def _greedy_sample(cfg: ModelConfig, params: Params, hidden) -> jnp.ndarray:
+    """On-device greedy sampling: argmax fused over the LM head so the paged
+    steps hand back [R] int32 token ids instead of [R, V] logits — the engine
+    never pulls a logits tensor (or a per-row scalar) across the host-device
+    boundary."""
+    return jnp.argmax(_head(cfg, params, hidden), axis=-1).astype(jnp.int32)
+
+
 def paged_chunk_step(cfg: ModelConfig, params: Params, tokens, cache, row_pos, *,
                      rctx: RunCtx, row_lens, block_tables, write_slots,
                      logits_at):
@@ -750,24 +763,26 @@ def paged_chunk_step(cfg: ModelConfig, params: Params, tokens, cache, row_pos, *
     One dispatch advances *every* prefill row in the decision: ``tokens``
     [R, L] holds each request's chunk (bucket-padded), ``row_pos`` [R] its
     cache offset, ``row_lens`` [R] its post-chunk valid length, ``logits_at``
-    [R] the index of its last real token. Returns (logits [R, V], cache)."""
+    [R] the index of its last real token. Returns (token_ids [R] int32,
+    cache) — greedy sampling happens on device (see ``_greedy_sample``)."""
     x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
                                  mode="paged_chunk", pos=row_pos, lengths=row_lens,
                                  paged=PagedView(block_tables, write_slots))
     sel = jnp.take_along_axis(
         x, jnp.asarray(logits_at).reshape(-1, 1, 1), axis=1)[:, 0]
-    return _head(cfg, params, sel), new_cache
+    return _greedy_sample(cfg, params, sel), new_cache
 
 
 def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache, *,
                       rctx: RunCtx, lengths, block_tables, write_slots):
     """One decode step for a ragged row batch over the paged cache (the
     paged_attention kernel on TPU, its jnp oracle elsewhere). ``lengths`` [R]
-    counts each row's tokens *including* the one being written."""
+    counts each row's tokens *including* the one being written. Returns
+    (token_ids [R] int32, cache) — greedy sampling happens on device."""
     x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
                                  mode="paged_decode", pos=0, lengths=lengths,
                                  paged=PagedView(block_tables, write_slots))
-    return _head(cfg, params, x[:, -1]), new_cache
+    return _greedy_sample(cfg, params, x[:, -1]), new_cache
 
 
 def build_model(cfg: ModelConfig, rctx: Optional[RunCtx] = None):

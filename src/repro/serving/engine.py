@@ -7,25 +7,40 @@ substrate. Two cache designs share one serve loop:
   in physical pages handed out by :class:`BlockAllocator`, which is the
   single admission/preemption authority (admit on free blocks, grow per
   emitted token, evict-and-recompute the lowest-priority owner when decode
-  growth fails). A scheduler ``Decision`` executes as at most **two** fused
-  JIT dispatches regardless of how many requests it names: one ragged
+  growth fails). A scheduler ``Decision`` within the row ladder executes as
+  at most **two** fused JIT dispatches no matter how many requests it names
+  (row counts above ``ROW_BUCKETS[-1]`` and chunks above the top chunk
+  bucket split across extra dispatches): one ragged
   chunked-prefill batch (every prefill row at its own offset, vLLM-style
-  slot-mapped page writes) and one ragged decode batch (``paged_attention``
-  Pallas kernel on TPU, its jnp oracle on CPU). Concurrency is bounded by KV
-  pages, not by a slot count, and KV pressure (`utilization`, evictions) is
-  surfaced to ``SchedulerBase.schedule/observe`` so chunk budgets back off
-  before allocation failures.
+  slot-mapped page writes, the ``paged_prefill_attention`` kernel on TPU)
+  and one ragged decode batch (``paged_attention`` kernel on TPU; both fall
+  back to their jnp oracles on CPU). Concurrency is bounded by KV pages, not
+  by a slot count, and KV pressure (`utilization`, evictions) is surfaced to
+  ``SchedulerBase.schedule/observe`` so chunk budgets back off before
+  allocation failures.
+
+  The paged hot path is **zero-sync**: both fused steps sample greedily *on
+  device* and return int32 token ids, the serve loop runs one round ahead of
+  the device (JAX async dispatch), and the only device→host transfer is a
+  single deferred token-id readback per scheduler round — round N's ids are
+  pulled while round N+1's admission, scheduling and numpy batch assembly
+  have already happened on the host. Block-table uploads are content-cached
+  and reused across rounds. ``overlap=False`` restores the legacy
+  sync-every-row behaviour for A/B profiling (``bench_goodput
+  --profile-overhead``).
 * **slot** (fallback for recurrent/MLA/enc-dec archs whose per-request state
   is not paged) — contiguous ``max_slots x max_len`` rows, per-request
   chunked prefill and lockstep ragged decode, as in the original engine.
 
-Wall-clock latencies feed the online predictor in both modes. On CPU the
+Wall-clock latencies feed the online predictor in both modes (paged observes
+one round late, at the readback that proves the round finished). On CPU the
 engine serves the reduced-config models (the examples use it); on TPU the
 same loop drives the sharded step functions with the Pallas kernels
 underneath.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -47,12 +62,23 @@ from repro.serving.request import ReqState, Request
 # are split across dispatches instead of being silently truncated.
 CHUNK_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
+# fused-batch *row* ladder: like CHUNK_BUCKETS but for the batch dimension.
+# Row counts above the top rung are split across dispatches, so the set of
+# compiled row shapes is bounded by this tuple no matter how high concurrency
+# climbs (an unbounded next-pow2 ladder mints a fresh XLA program for every
+# new power of two it meets).
+ROW_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
 
 def _bucket(n: int, buckets=CHUNK_BUCKETS) -> int:
     for b in buckets:
         if n <= b:
             return b
     return buckets[-1]
+
+
+def _row_bucket(n: int) -> int:
+    return _bucket(n, ROW_BUCKETS)
 
 
 def _pow2(n: int, lo: int = 1) -> int:
@@ -71,6 +97,27 @@ class EngineStats:
     evictions: int = 0
     max_concurrency: int = 0      # peak simultaneously-admitted requests
     max_round_calls: int = 0      # peak model dispatches in one scheduler round
+    # ---- zero-sync hot-path accounting (paged mode) --------------------------
+    token_readbacks: int = 0      # device->host token-id transfers
+    sync_s: float = 0.0           # wall time blocked waiting on the device
+    dispatch_s: float = 0.0       # wall time issuing (async) model dispatches
+    device_busy_s: float = 0.0    # wall covered by an in-flight round
+    host_s: float = 0.0           # wall with NO round in flight: unhidden
+                                  # host work + idle (the overlap target -> 0)
+    reused_uploads: int = 0       # block-table uploads served from device cache
+
+
+@dataclasses.dataclass
+class _InflightRound:
+    """One dispatched-but-not-read-back scheduler round (paged mode)."""
+
+    toks: List                    # device int32 [Rb] arrays, one per dispatch
+    emits: List[Tuple[int, int]]  # (rid, row in the concatenated tok vector)
+    t_dispatch: float             # perf_counter at dispatch
+    executed_batch: List = dataclasses.field(default_factory=list)
+    # (req, token index, was_first, was_finish): timestamps provisionally
+    # stamped at dispatch, corrected to readback time at flush.
+    stamped: List = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -78,6 +125,9 @@ class ServingEngine:
 
     ``cache_mode``: ``"paged"`` | ``"slot"`` | ``"auto"`` (paged where the
     architecture supports it — see ``supports_paged_cache``).
+    ``overlap``: paged mode only — run the one-step-lookahead pipeline
+    (default). ``False`` syncs every round immediately with per-row token
+    transfers, reproducing the pre-zero-sync hot path for profiling.
     """
 
     def __init__(self, cfg: ModelConfig, scheduler: SchedulerBase, *,
@@ -85,6 +135,7 @@ class ServingEngine:
                  max_slots: int = 8, max_len: int = 512,
                  kv_capacity_tokens: Optional[int] = None,
                  page_size: int = 16, decode_reserve_tokens: int = 64,
+                 overlap: bool = True,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
         if cache_mode == "auto":
             cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
@@ -97,6 +148,7 @@ class ServingEngine:
         self.sched = scheduler
         self.max_slots = max_slots
         self.max_len = max_len
+        self.overlap = overlap
         self.rctx = rctx or RunCtx(block_q=32, block_k=32, mlstm_block=32)
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self.stats = EngineStats()
@@ -105,6 +157,7 @@ class ServingEngine:
         self._resumed: set = set()    # evicted mid-decode; re-prefill, no emit
         self._round_calls = 0
         self._last_round_evictions = 0
+        self._t0 = 0.0
 
         if cache_mode == "paged":
             capacity = kv_capacity_tokens or max_slots * max_len
@@ -118,6 +171,8 @@ class ServingEngine:
             self._trash_slot = self.alloc.num_blocks * page_size
             self._length: Dict[int, int] = {}     # tokens resident per rid
             self._folded: Dict[int, int] = {}     # gen tokens folded on evict
+            self._inflight: Optional[_InflightRound] = None
+            self._dev_cache: Dict[Tuple, Tuple[np.ndarray, jnp.ndarray]] = {}
             rctx_ = self.rctx
 
             def chunk_fused(params, tokens, cache, row_pos, row_lens, bt, ws,
@@ -136,6 +191,9 @@ class ServingEngine:
             self._jit_decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
         else:
             self._init_slot_mode(cfg, max_slots, max_len)
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
 
     # =========================================================================
     # slot mode (legacy contiguous rows; recurrent / MLA / enc-dec archs)
@@ -277,11 +335,15 @@ class ServingEngine:
                           evictions=self._last_round_evictions)
 
     def _evict(self, victim: Request, active: List[Request],
-               queued: List[Request],
-               prompts: Dict[int, np.ndarray]) -> None:
+               queued, prompts: Dict[int, np.ndarray]) -> None:
         """Relegate ``victim`` (recompute-on-resume): drop its pages and fold
         already-emitted tokens into its prompt so re-prefill reconstructs the
         exact cache state and greedy decoding continues deterministically."""
+        # folding reads the victim's emitted token *values*; if the previous
+        # round is still in flight its ids are not host-visible yet — sync
+        # early (this round's one readback just happens now instead of at
+        # dispatch time; eviction is the rare path).
+        self._flush_round()
         self.alloc.evict(victim.rid)
         self.stats.evictions += 1
         gen = self._tokens_out.get(victim.rid, [])
@@ -309,7 +371,7 @@ class ServingEngine:
         queued.append(victim)
 
     def _grow_or_evict(self, req: Request, new_tokens: int,
-                       active: List[Request], queued: List[Request],
+                       active: List[Request], queued,
                        prompts: Dict[int, np.ndarray],
                        protected: set) -> bool:
         """Grow ``req``'s allocation, evicting lowest-priority owners (newest
@@ -327,33 +389,82 @@ class ServingEngine:
             self._evict(by_rid.pop(vid), active, queued, prompts)
         return True
 
+    # ---- zero-sync plumbing --------------------------------------------------
+    def _readback(self, arr) -> np.ndarray:
+        """The single device→host transfer point of the paged hot path (the
+        transfer-counting test pins every other code path behind a
+        ``transfer_guard``)."""
+        self.stats.token_readbacks += 1
+        with jax.transfer_guard_device_to_host("allow"):
+            return np.asarray(arr)
+
+    def _flush_round(self) -> None:
+        """Materialize the in-flight round: one token-id readback, then append
+        emitted ids to ``_tokens_out``, correct provisional timestamps to
+        completion time, and feed the scheduler's observe()."""
+        fr = self._inflight
+        if fr is None:
+            return
+        self._inflight = None
+        t0 = time.perf_counter()
+        joined = fr.toks[0] if len(fr.toks) == 1 else jnp.concatenate(fr.toks)
+        if self.overlap:
+            vals = self._readback(joined)
+            for rid, idx in fr.emits:
+                self._tokens_out.setdefault(rid, []).append(int(vals[idx]))
+        else:
+            # legacy profile: one scalar transfer per emitting row, like the
+            # pre-zero-sync engine's per-row ``int(jnp.argmax(logits[i]))``.
+            for rid, idx in fr.emits:
+                tok = int(self._readback(joined[idx]))
+                self._tokens_out.setdefault(rid, []).append(tok)
+        self.stats.sync_s += time.perf_counter() - t0
+        t_done = self._now()
+        for r, k, was_first, was_finish in fr.stamped:
+            r.token_times[k] = t_done
+            if was_first:
+                r.first_token_time = t_done
+            if was_finish:
+                r.finish_time = t_done
+        latency = time.perf_counter() - fr.t_dispatch
+        # dispatch->flush intervals are disjoint (the next dispatch happens
+        # only after this flush), so their sum is the wall time covered by an
+        # in-flight round; the remainder is unhidden host overhead.
+        self.stats.device_busy_s += latency
+        self.sched.observe(fr.executed_batch, latency, kv=self._kv_pressure())
+
+    def _upload_cached(self, kind, arr: np.ndarray) -> jnp.ndarray:
+        """Host→device upload with content reuse: block tables are stable
+        across steady decode rounds (they only change when a request crosses
+        a page boundary or the batch recomposes), so the device buffer from
+        the previous round is reused instead of re-uploaded. Keyed per
+        consumer ``kind`` and per row-group, so the multiple same-shape
+        dispatches of a split oversized round don't evict each other's
+        entries within one round."""
+        key = (kind, arr.shape)
+        prev = self._dev_cache.get(key)
+        if prev is not None and np.array_equal(prev[0], arr):
+            self.stats.reused_uploads += 1
+            return prev[1]
+        dev = jnp.asarray(arr)
+        self._dev_cache[key] = (arr, dev)
+        return dev
+
     # ---- fused dispatch assembly ---------------------------------------------
     def _page_slots(self, rid: int, positions: np.ndarray) -> np.ndarray:
         pt = np.asarray(self.alloc.page_table(rid), np.int64)
         return pt[positions // self.page_size] * self.page_size \
             + positions % self.page_size
 
-    def _run_paged_prefill(self, entries: List[Tuple[Request, int]],
-                           prompts: Dict[int, np.ndarray]) -> None:
-        """One fused dispatch advancing every prefill row by its allocation
-        (rows above the top chunk bucket loop over extra dispatches)."""
-        work = [[r, int(self.lengths_of(r)), n] for r, n in entries]
-        while work:
-            batch = [(r, s, min(n, CHUNK_BUCKETS[-1])) for r, s, n in work]
-            self._dispatch_chunk_batch(batch, prompts)
-            nxt = []
-            for (r, s, n), (_, _, step) in zip(work, batch):
-                if n - step > 0:
-                    nxt.append([r, s + step, n - step])
-            work = nxt
-
     def lengths_of(self, req: Request) -> int:
         return self._length.get(req.rid, 0)
 
-    def _dispatch_chunk_batch(self, batch: List[Tuple[Request, int, int]],
-                              prompts: Dict[int, np.ndarray]) -> None:
+    def _assemble_chunk(self, batch: List[Tuple[Request, int, int]],
+                        prompts: Dict[int, np.ndarray]) -> dict:
+        """Numpy assembly of one fused ragged-prefill dispatch (pure host
+        work; runs while the previous round executes on device)."""
         R = len(batch)
-        Rb = _pow2(R)
+        Rb = _row_bucket(R)
         Lb = _bucket(max(n for _, _, n in batch))
         nb = _pow2(max(self.alloc.blocks_for(s + n) for _, s, n in batch))
         tokens = np.zeros((Rb, Lb), np.int32)
@@ -362,6 +473,7 @@ class ServingEngine:
         logits_at = np.zeros((Rb,), np.int32)
         tables = np.zeros((Rb, nb), np.int32)
         slots = np.full((Rb, Lb), self._trash_slot, np.int64)
+        emit_rows: List[Tuple[int, int]] = []
         for i, (r, start, n) in enumerate(batch):
             tokens[i, :n] = prompts[r.rid][start:start + n]
             row_pos[i] = start
@@ -373,49 +485,86 @@ class ServingEngine:
             need = self.alloc.blocks_for(start + n)
             tables[i, :need] = self.alloc.page_table(r.rid)[:need]
             slots[i, :n] = self._page_slots(r.rid, np.arange(start, start + n))
-        self._note_shape(("chunk", Rb, Lb, nb))
-        logits, self.cache = self._jit_chunk_fused(
-            self.params, jnp.asarray(tokens), self.cache,
-            jnp.asarray(row_pos), jnp.asarray(row_lens), jnp.asarray(tables),
-            jnp.asarray(slots.reshape(-1), dtype=jnp.int32),
-            jnp.asarray(logits_at))
-        self.stats.prefill_calls += 1
-        self._round_calls += 1
-        for i, (r, start, n) in enumerate(batch):
             self._length[r.rid] = start + n
-            if start + n >= r.prompt_len:
-                if r.rid in self._resumed:
-                    continue          # token already emitted pre-eviction
-                tok = int(jnp.argmax(logits[i]))
-                self._tokens_out.setdefault(r.rid, []).append(tok)
+            if start + n >= r.prompt_len and r.rid not in self._resumed:
+                emit_rows.append((r.rid, i))
+        return {"kind": "chunk", "tokens": tokens, "row_pos": row_pos,
+                "row_lens": row_lens, "logits_at": logits_at,
+                "tables": tables, "slots": slots, "emit_rows": emit_rows,
+                "Rb": Rb, "Lb": Lb, "nb": nb}
 
-    def _run_paged_decode(self, reqs: Sequence[Request]) -> None:
+    def _assemble_prefill(self, entries: List[Tuple[Request, int]],
+                          prompts: Dict[int, np.ndarray]) -> List[dict]:
+        """Split the decision's prefill rows over the chunk-length and row
+        ladders: rows above the top chunk bucket loop over extra dispatches,
+        row counts above the top row bucket split across dispatches."""
+        asms: List[dict] = []
+        work = [[r, self.lengths_of(r), n] for r, n in entries]
+        while work:
+            step_batch = [(r, s, min(n, CHUNK_BUCKETS[-1])) for r, s, n in work]
+            for i in range(0, len(step_batch), ROW_BUCKETS[-1]):
+                asm = self._assemble_chunk(
+                    step_batch[i:i + ROW_BUCKETS[-1]], prompts)
+                asm["group"] = len(asms)
+                asms.append(asm)
+            nxt = []
+            for (r, s, n), (_, _, step) in zip(work, step_batch):
+                if n - step > 0:
+                    nxt.append([r, s + step, n - step])
+            work = nxt
+        return asms
+
+    def _assemble_decode(self, reqs: Sequence[Request]) -> dict:
+        """Numpy assembly of one fused decode dispatch; the input token ids
+        are filled in after the previous round's flush (they are its output)."""
         R = len(reqs)
-        Rb = _pow2(R)
+        Rb = _row_bucket(R)
         new_lens = [self._length[r.rid] + 1 for r in reqs]
-        nb = _pow2(max(self.alloc.blocks_for(L) for L in new_lens))
+        pts = [self.alloc.page_table(r.rid) for r in reqs]
+        # decode rows carry their *full* reserved page table (it only changes
+        # on grow/evict, never on a per-token page-boundary crossing), so the
+        # uploaded table bytes are stable round over round and the device
+        # buffer cache actually hits; pages past ceil(len/ps) are never read
+        # (the kernel skips them, the oracle masks them).
+        nb = _pow2(max(len(pt) for pt in pts))
         tokens = np.zeros((Rb, 1), np.int32)
         lengths = np.zeros((Rb,), np.int32)
         tables = np.zeros((Rb, nb), np.int32)
         slots = np.full((Rb,), self._trash_slot, np.int64)
-        for i, r in enumerate(reqs):
-            prev = self._tokens_out.get(r.rid)
-            tokens[i, 0] = prev[-1] if prev else 0
+        for i, (r, pt) in enumerate(zip(reqs, pts)):
             lengths[i] = new_lens[i]
-            need = self.alloc.blocks_for(new_lens[i])
-            tables[i, :need] = self.alloc.page_table(r.rid)[:need]
+            tables[i, :len(pt)] = pt
             slots[i] = self._page_slots(
                 r.rid, np.asarray([new_lens[i] - 1]))[0]
-        self._note_shape(("decode", Rb, nb))
-        logits, self.cache = self._jit_decode_fused(
-            self.params, jnp.asarray(tokens), self.cache, jnp.asarray(lengths),
-            jnp.asarray(tables), jnp.asarray(slots, dtype=jnp.int32))
-        self.stats.decode_calls += 1
-        self._round_calls += 1
-        for i, r in enumerate(reqs):
             self._length[r.rid] += 1
-            tok = int(jnp.argmax(logits[i]))
-            self._tokens_out.setdefault(r.rid, []).append(tok)
+        return {"kind": "decode", "rids": [r.rid for r in reqs],
+                "tokens": tokens, "lengths": lengths, "tables": tables,
+                "slots": slots, "Rb": Rb, "nb": nb}
+
+    def _dispatch(self, asm: dict):
+        """Issue one fused dispatch (async under JAX dispatch); returns the
+        device token-id vector [Rb]."""
+        if asm["kind"] == "decode":
+            self._note_shape(("decode", asm["Rb"], asm["nb"]))
+            toks, self.cache = self._jit_decode_fused(
+                self.params, jnp.asarray(asm["tokens"]), self.cache,
+                jnp.asarray(asm["lengths"]),
+                self._upload_cached(("decode", asm.get("group", 0)),
+                                    asm["tables"]),
+                jnp.asarray(asm["slots"].astype(np.int32)))
+            self.stats.decode_calls += 1
+        else:
+            self._note_shape(("chunk", asm["Rb"], asm["Lb"], asm["nb"]))
+            toks, self.cache = self._jit_chunk_fused(
+                self.params, jnp.asarray(asm["tokens"]), self.cache,
+                jnp.asarray(asm["row_pos"]), jnp.asarray(asm["row_lens"]),
+                self._upload_cached(("chunk", asm.get("group", 0)),
+                                    asm["tables"]),
+                jnp.asarray(asm["slots"].reshape(-1).astype(np.int32)),
+                jnp.asarray(asm["logits_at"]))
+            self.stats.prefill_calls += 1
+        self._round_calls += 1
+        return toks
 
     def _note_shape(self, key) -> None:
         if key not in self._seen_shapes:
@@ -438,45 +587,67 @@ class ServingEngine:
         # into the recompute prompt); copy so the caller's dict stays intact
         prompts = dict(prompts)
         paged = self.cache_mode == "paged"
-        t0 = time.perf_counter()
-        pending = sorted(requests, key=lambda r: r.arrival)   # not yet arrived
-        queued: List[Request] = []                            # arrived, no KV
-        active: List[Request] = []                            # KV-resident
+        self._t0 = time.perf_counter()
+        busy0 = self.stats.device_busy_s    # stats accumulate across serve()s
+        now = self._now
+        # arrival-indexed cursor over the sorted arrivals: admission is O(new
+        # arrivals), not O(still-pending), so host cost stays flat with
+        # thousands of queued requests.
+        arrivals = sorted(requests, key=lambda r: r.arrival)
+        pend_i = 0
+        queued: collections.deque = collections.deque()   # arrived, no KV
+        active: List[Request] = []                        # KV-resident
         done: List[Request] = []
 
-        def now() -> float:
-            return time.perf_counter() - t0
-
         def admit() -> None:
-            while pending and pending[0].arrival <= now():
-                queued.append(pending.pop(0))
-            still: List[Request] = []
-            for r in queued:
-                if paged:
-                    # admission *reserves* the full prompt + decode headroom
-                    # so concurrent admits are gated by the same free pool
-                    # (admit(rid, 0) would let every fitting prompt in at
-                    # once and convert admission control into evict thrash)
-                    ok = self.alloc.admit(
-                        r.rid, r.remaining_prefill() + self.decode_reserve)
-                else:
-                    ok = self._assign_slot(r) is not None
-                if ok:
-                    active.append(r)
+            nonlocal pend_i
+            while pend_i < len(arrivals) and arrivals[pend_i].arrival <= now():
+                queued.append(arrivals[pend_i])
+                pend_i += 1
+            # O(1) short-circuit: with the free pool exhausted no admission
+            # can succeed, so skip the scan entirely (the common state while
+            # saturated — this is what keeps admit() off the hot path).
+            exhausted = (self.alloc.free_blocks == 0 if paged
+                         else not self.free_slots)
+            if queued and not exhausted:
+                failures = 0
+                for _ in range(len(queued)):
+                    r = queued.popleft()
                     if paged:
-                        self._length[r.rid] = 0
-                else:
-                    still.append(r)
-            queued[:] = still
+                        # admission *reserves* the full prompt + decode
+                        # headroom so concurrent admits are gated by the same
+                        # free pool (admit(rid, 0) would let every fitting
+                        # prompt in at once and convert admission control
+                        # into evict thrash)
+                        ok = self.alloc.admit(
+                            r.rid, r.remaining_prefill() + self.decode_reserve)
+                    else:
+                        ok = self._assign_slot(r) is not None
+                    if ok:
+                        active.append(r)
+                        if paged:
+                            self._length[r.rid] = 0
+                    else:
+                        queued.append(r)
+                        failures += 1
+                    if paged and self.alloc.free_blocks == 0:
+                        # pool just drained: rotate the failures back to the
+                        # front so FIFO order survives the early exit.
+                        queued.rotate(failures)
+                        break
             self.stats.max_concurrency = max(self.stats.max_concurrency,
                                              len(active))
 
         empty_rounds = 0
-        while (pending or queued or active) and now() < max_wall_s:
+        while (pend_i < len(arrivals) or queued or active) \
+                and now() < max_wall_s:
             admit()
             if not active:
-                if pending:
-                    time.sleep(max(pending[0].arrival - now(), 0.0) + 1e-4)
+                if paged:
+                    self._flush_round()     # device is idle anyway
+                if pend_i < len(arrivals):
+                    time.sleep(max(arrivals[pend_i].arrival - now(), 0.0)
+                               + 1e-4)
                     continue
                 if queued:   # arrived but nothing fits: engine is wedged
                     break
@@ -491,6 +662,8 @@ class ServingEngine:
             decision = self.sched.schedule(now(), waiting, prefilling,
                                            decoding, kv=kv)
             if decision is None:
+                if paged:
+                    self._flush_round()
                 time.sleep(1e-3)
                 continue
 
@@ -505,6 +678,8 @@ class ServingEngine:
                 # any state either, the engine is wedged (e.g. a lone request
                 # outgrew total capacity); bail instead of spinning to the
                 # wall clock.
+                if paged:
+                    self._flush_round()
                 empty_rounds += 1
                 if self._last_round_evictions == 0 and empty_rounds >= 8:
                     break
@@ -518,10 +693,14 @@ class ServingEngine:
                                              self._round_calls)
 
             executed_batch = []
+            stamped = []
             for r, n, ctx in executed:
                 executed_batch.append((n, ctx))
+                emitted = False
+                was_first = r.first_token_time is None
                 if r.state == ReqState.DECODING:
                     r.emit_token(t_now)
+                    emitted = True
                 else:
                     r.advance_prefill(n)
                     if r.remaining_prefill() == 0:
@@ -532,6 +711,10 @@ class ServingEngine:
                             r.state = ReqState.DECODING
                         else:
                             r.emit_token(t_now)
+                            emitted = True
+                if emitted and paged:
+                    stamped.append((r, len(r.token_times) - 1, was_first,
+                                    r.state == ReqState.FINISHED))
                 if r.state == ReqState.FINISHED:
                     if paged:
                         self.alloc.free(r.rid)
@@ -541,19 +724,34 @@ class ServingEngine:
                         self._release_slot(r)
                     active.remove(r)
                     done.append(r)
-            # close the loop on what actually ran (post split/clamp), not on
-            # what the decision asked for.
-            self.sched.observe(executed_batch, latency,
-                               kv=self._kv_pressure() if paged else None)
             if paged:
+                # readback + observe happen at the next round's flush; the
+                # executed batch is recorded on the in-flight round so the
+                # observation reflects what actually ran (post split/clamp).
+                if self._inflight is not None:
+                    self._inflight.executed_batch = executed_batch
+                    self._inflight.stamped = stamped
                 self.alloc.check_invariants()
+                if not self.overlap:
+                    self._flush_round()
+            else:
+                # close the loop on what actually ran (post split/clamp), not
+                # on what the decision asked for.
+                self.sched.observe(executed_batch, latency, kv=None)
 
+        if paged:
+            self._flush_round()
+        wall = now()
+        # host_s is per-serve (this call's wall minus this call's in-flight
+        # coverage); the other counters are cumulative across serve() calls.
+        self.stats.host_s = max(
+            wall - (self.stats.device_busy_s - busy0), 0.0)
         return {
             "finished": done,
             "unfinished": [r for r in requests if r.state != ReqState.FINISHED],
             "stats": self.stats,
             "outputs": dict(self._tokens_out),
-            "wall": now(),
+            "wall": wall,
         }
 
     # ---- per-mode decision execution -----------------------------------------
@@ -574,8 +772,10 @@ class ServingEngine:
 
     def _execute_paged(self, decision, active, queued, prompts
                        ) -> List[Tuple[Request, int, int]]:
-        """Grow allocations (evicting under pressure), then run the decision
-        as one fused decode dispatch + one fused ragged prefill dispatch."""
+        """Grow allocations (evicting under pressure), assemble the round on
+        the host while the previous round still runs on device, sync once on
+        the previous round's token ids, then dispatch the decision as one
+        fused decode + one fused ragged prefill (both async)."""
         protected = {r.rid for r, _ in decision.alloc}
         ev0 = self.alloc.evictions
 
@@ -606,14 +806,44 @@ class ServingEngine:
         decode_rows = [r for r in decode_rows if is_live(r)]
         prefill_rows = [(r, n) for r, n in prefill_rows if is_live(r)]
         self._last_round_evictions = self.alloc.evictions - ev0
+        if not decode_rows and not prefill_rows:
+            return []
 
+        # ---- host-side numpy assembly (device still busy with round N) ------
         executed: List[Tuple[Request, int, int]] = []
+        decode_asms: List[dict] = []
         if decode_rows:
             ctxs = {r.rid: r.context_len() for r in decode_rows}
-            self._run_paged_decode(decode_rows)
+            for i in range(0, len(decode_rows), ROW_BUCKETS[-1]):
+                asm = self._assemble_decode(decode_rows[i:i + ROW_BUCKETS[-1]])
+                asm["group"] = i // ROW_BUCKETS[-1]
+                decode_asms.append(asm)
             executed += [(r, 1, ctxs[r.rid]) for r in decode_rows]
+        chunk_asms: List[dict] = []
         if prefill_rows:
             ctxs = {r.rid: r.context_len() for r, _ in prefill_rows}
-            self._run_paged_prefill(prefill_rows, prompts)
+            chunk_asms = self._assemble_prefill(prefill_rows, prompts)
             executed += [(r, n, ctxs[r.rid]) for r, n in prefill_rows]
+
+        # ---- the round's single sync: round N's token ids -------------------
+        self._flush_round()
+
+        # ---- dispatch round N+1 (async) -------------------------------------
+        t_disp = time.perf_counter()
+        toks, emits, off = [], [], 0
+        for asm in decode_asms:
+            # decode inputs are round N's outputs — only now host-visible
+            for i, rid in enumerate(asm["rids"]):
+                prev = self._tokens_out.get(rid)
+                asm["tokens"][i, 0] = prev[-1] if prev else 0
+            toks.append(self._dispatch(asm))
+            emits += [(rid, off + i) for i, rid in enumerate(asm["rids"])]
+            off += asm["Rb"]
+        for asm in chunk_asms:
+            toks.append(self._dispatch(asm))
+            emits += [(rid, off + row) for rid, row in asm["emit_rows"]]
+            off += asm["Rb"]
+        self.stats.dispatch_s += time.perf_counter() - t_disp
+        self._inflight = _InflightRound(toks=toks, emits=emits,
+                                        t_dispatch=t_disp)
         return executed

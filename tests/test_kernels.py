@@ -13,6 +13,8 @@ from repro.kernels.mlstm_chunkwise.kernel import mlstm_chunkwise
 from repro.kernels.mlstm_chunkwise.ref import mlstm_ref
 from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_prefill_attention.kernel import paged_prefill_attention
+from repro.kernels.paged_prefill_attention.ref import paged_prefill_attention_ref
 
 RNG = np.random.default_rng(42)
 
@@ -80,6 +82,75 @@ def test_paged_attention(case, dtype):
                               window=window, softcap=cap)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged prefill attention (ragged chunked prefill over block tables)
+# ---------------------------------------------------------------------------
+PPA_CASES = [
+    # (R, Sq, Hkv, G, D, page_size, P_total, pages_per_row, window, softcap, bq)
+    (2, 32, 2, 2, 32, 16, 16, 6, 0, 0.0, 16),
+    (3, 64, 2, 4, 64, 16, 32, 8, 0, 0.0, 32),   # ragged offsets, GQA
+    (2, 32, 4, 1, 64, 16, 16, 4, 40, 0.0, 32),  # sliding window
+    (1, 16, 2, 2, 128, 16, 8, 4, 0, 30.0, 16),  # softcap (gemma2)
+    (4, 16, 2, 2, 32, 16, 16, 4, 0, 0.0, 16),   # has an all-padding row
+]
+
+
+@pytest.mark.parametrize("case", PPA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_attention(case, dtype):
+    R, Sq, Hkv, G, D, ps, P, n, window, cap, bq = case
+    q = jnp.asarray(RNG.normal(size=(R, Sq, Hkv, G, D)), dtype)
+    kp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), dtype)
+    vp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), dtype)
+    bt = np.asarray(RNG.integers(0, P, (R, n)), np.int32)
+    # every row prefills a chunk of (up to) Sq tokens at its own offset
+    pos = np.asarray(RNG.integers(0, n * ps - Sq + 1, (R,)), np.int32)
+    lens = pos + np.asarray(RNG.integers(1, Sq + 1, (R,)), np.int32)
+    if R >= 4:
+        # engine row-bucket padding: zero-length row addressing the trash page
+        pos[-1], lens[-1] = 0, 0
+        bt[-1] = P - 1
+    out = paged_prefill_attention(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(lens),
+        scale=D ** -0.5, window=window, softcap=cap, block_q=bq,
+        interpret=True)
+    ref = paged_prefill_attention_ref(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(lens),
+        scale=D ** -0.5, window=window, softcap=cap)
+    # compare only positions the engine consumes: q rows within the row's
+    # valid post-chunk length (padding rows / tail produce discarded garbage)
+    q_pos = pos[:, None] + np.arange(Sq)[None, :]
+    valid = q_pos < lens[:, None]
+    o, r_ = np.asarray(out, np.float32), np.asarray(ref, np.float32)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(o[valid], r_[valid], **tol)
+
+
+def test_paged_prefill_ref_matches_legacy_gather_path():
+    """The jnp oracle must be bit-identical to the pre-kernel engine path
+    (gather_pages + dense masked softmax) — the slot-vs-paged equivalence
+    suite rides on this."""
+    from repro.models.attention import gather_pages
+    from repro.models import model as Mod
+
+    class _Cfg:
+        attn_logit_softcap = 0.0
+    R, Sq, Hkv, G, D, ps, P, n = 2, 32, 2, 2, 32, 16, 16, 4
+    q = jnp.asarray(RNG.normal(size=(R, Sq, Hkv, G, D)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (R, n)), jnp.int32)
+    pos = jnp.asarray([0, 17], jnp.int32)
+    lens = pos + jnp.asarray([Sq, Sq - 5], jnp.int32)
+    ref = paged_prefill_attention_ref(q, kp, vp, bt, pos, lens,
+                                      scale=D ** -0.5)
+    k_all = gather_pages(kp, bt)
+    v_all = gather_pages(vp, bt)
+    legacy = Mod._chunk_attend(_Cfg(), None, q, k_all, v_all, pos, lens, 0,
+                               scale=D ** -0.5)
+    assert np.array_equal(np.asarray(ref), np.asarray(legacy))
 
 
 # ---------------------------------------------------------------------------
