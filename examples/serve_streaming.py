@@ -1,0 +1,92 @@
+"""Streaming online-serving demo: submit / stream / cancel on a live engine.
+
+Exercises the step-based online API end to end on a reduced config (CPU):
+
+* ``InferenceServer.submit`` mixes tenants with different SLO classes
+  (interactive / standard / batch) in one paged-KV engine;
+* ``handle.tokens()`` streams ids incrementally (tokens surface one round
+  after dispatch — the zero-sync deferred readback);
+* ``handle.cancel()`` aborts one stream mid-generation and its KV pages go
+  straight back to the BlockAllocator;
+* a stop-token request terminates early via the EOS check that rides the
+  per-round readback.
+
+    PYTHONPATH=src python examples/serve_streaming.py [--cache-mode paged]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.server import InferenceServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--cache-mode", default="auto",
+                    choices=["auto", "slot", "paged"])
+    ap.add_argument("--kv-tokens", type=int, default=4096)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    server = InferenceServer.build(cfg, cache_mode=args.cache_mode,
+                                   max_slots=4, max_len=512,
+                                   kv_capacity_tokens=args.kv_tokens)
+    core = server.core
+    print(f"online API demo on {cfg.name} ({core.cache_mode} KV cache)")
+
+    rng = np.random.default_rng(0)
+    mk = lambda n: rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+    # --- three tenants in one engine -------------------------------------
+    chat = server.submit(mk(48), slo_class="interactive", max_output=8)
+    summ = server.submit(mk(96), slo_class="batch", max_output=12)
+    spam = server.submit(mk(64), slo_class="standard", max_output=64)
+
+    # stream the interactive request token by token
+    print(f"req {chat.rid} [interactive] streaming: ", end="", flush=True)
+    for tok in chat.tokens():
+        print(tok, end=" ", flush=True)
+    print(f"<done: {chat.finish_reason}>")
+
+    # cancel the long-running one mid-decode; its pages free immediately
+    for tok in spam.tokens():
+        if len(spam.collected) >= 3:
+            spam.cancel()
+            break
+    print(f"req {spam.rid} [standard] cancelled after "
+          f"{len(spam.collected)} tokens (reason={spam.finish_reason})")
+
+    # stop-token request: terminate when the model emits a known id.
+    # Greedy decode is deterministic, so reuse the chat request's second
+    # token as the stop id for an identical prompt — it must stop there.
+    stop_tok = chat.collected[1]
+    rng2 = np.random.default_rng(0)
+    same_prompt = rng2.integers(1, cfg.vocab_size, 48).astype(np.int32)
+    eos = server.submit(same_prompt, slo_class="standard", max_output=8,
+                        stop_ids=(stop_tok,))
+    out = eos.result()
+    print(f"req {eos.rid} [stop_ids=({stop_tok},)] -> {out} "
+          f"(reason={eos.finish_reason})")
+    assert out == chat.collected[:2], "stop-token run diverged from greedy"
+
+    # drain the batch tenant
+    summ.result()
+    print(f"req {summ.rid} [batch] -> {summ.collected}")
+
+    st = core.stats
+    print(f"iterations={st.iterations} readbacks={st.token_readbacks} "
+          f"aborted={st.aborted} evictions={st.evictions} "
+          f"max_concurrency={st.max_concurrency}")
+    if core.cache_mode == "paged":
+        assert st.token_readbacks == st.iterations, \
+            "streaming frontend broke the one-readback-per-round property"
+        assert core.alloc.free_blocks == core.alloc.num_blocks, \
+            "KV pages leaked"
+        print(f"KV pool fully released "
+              f"({core.alloc.free_blocks}/{core.alloc.num_blocks} pages free)")
+
+
+if __name__ == "__main__":
+    main()

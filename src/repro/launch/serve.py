@@ -1,10 +1,13 @@
-"""Serving launcher: the SlidingServe engine on a real model.
+"""Serving launcher: the streaming InferenceServer on a real model.
 
 On this container it serves reduced configs on CPU; on TPU the same entry
 point builds the production mesh and shards the step functions (the engine
-loop is identical — see repro/serving/engine.py).
+loop is identical — see repro/serving/engine.py). Requests are submitted
+through the online API at their arrival times (open-loop) and tokens stream
+back through per-request handles.
 
     python -m repro.launch.serve --arch llama3.2-3b --requests 8
+    python -m repro.launch.serve --no-smoke --slo-class interactive ...
 """
 from __future__ import annotations
 
@@ -14,8 +17,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import SlidingServeScheduler
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import EngineCore
 from repro.serving.request import Request
+from repro.serving.server import SLO_CLASSES, InferenceServer
+from repro.serving.workloads import run_open_loop
 
 
 def main(argv=None):
@@ -23,8 +28,17 @@ def main(argv=None):
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--qps", type=float, default=2.0)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # --smoke/--no-smoke boolean pair (a bare store_true with default=True
+    # made the full-size configs unreachable from the CLI)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduce the model config for CPU smoke runs "
+                         "(--no-smoke serves the full-size architecture)")
     ap.add_argument("--max-budget", type=int, default=512)
+    ap.add_argument("--slo-class", default="standard",
+                    choices=sorted(SLO_CLASSES),
+                    help="named tenant class (ttft/tbt SLO pair) submitted "
+                         "requests run under")
     ap.add_argument("--cache-mode", default="auto",
                     choices=["auto", "slot", "paged"],
                     help="paged = block-table KV (production layout); "
@@ -38,27 +52,33 @@ def main(argv=None):
     if args.smoke:
         cfg = cfg.smoke()
     sched = SlidingServeScheduler(max_budget=args.max_budget, max_iter_time=2.0)
-    engine = ServingEngine(cfg, sched, cache_mode=args.cache_mode,
-                           max_slots=4, max_len=512,
-                           kv_capacity_tokens=args.kv_tokens,
-                           page_size=args.page_size)
+    core = EngineCore(cfg, sched, cache_mode=args.cache_mode,
+                      max_slots=4, max_len=512,
+                      kv_capacity_tokens=args.kv_tokens,
+                      page_size=args.page_size)
+    server = InferenceServer(core)
+    slo = SLO_CLASSES[args.slo_class]
     rng = np.random.default_rng(0)
     inter = rng.exponential(1.0 / args.qps, args.requests)
     arrivals = np.cumsum(inter)
     reqs = [Request(rid=i, arrival=float(arrivals[i]),
                     prompt_len=int(rng.integers(16, 128)),
                     max_output=int(rng.integers(4, 12)),
-                    ttft_slo=30.0, tbt_slo=30.0)
+                    ttft_slo=slo.ttft_slo, tbt_slo=slo.tbt_slo,
+                    slo_class=slo.name)
             for i in range(args.requests)]
-    out = engine.serve(reqs, max_wall_s=300.0)
-    st = out["stats"]
+    out = run_open_loop(server, reqs, max_wall_s=300.0)
+    st = core.stats
     print(f"finished {len(out['finished'])}/{len(reqs)} "
-          f"[{engine.cache_mode} cache]; iterations={st.iterations} "
+          f"[{core.cache_mode} cache, slo={args.slo_class}]; "
+          f"iterations={st.iterations} "
           f"max_concurrency={st.max_concurrency} evictions={st.evictions} "
           f"wall={out['wall']:.1f}s")
-    for r in out["finished"]:
+    for h in out["finished"]:
+        r = h.request
         print(f"  req {r.rid}: ttft={(r.first_token_time - r.arrival):.2f}s "
-              f"out={out['outputs'][r.rid]}")
+              f"out={h.collected}")
+    return out
 
 
 if __name__ == "__main__":

@@ -1,1 +1,16 @@
-"""Serving substrate: requests, queues, KV allocation, engine, simulator."""
+"""Serving substrate: requests, queues, KV allocation, engine, simulator.
+
+Online API surface (see README "Online API"):
+
+* :class:`repro.serving.engine.EngineCore` — step-based core
+  (``add_request`` / ``abort`` / ``step`` / ``has_work``), emitting
+  :class:`repro.serving.engine.EngineEvent` per round.
+* :class:`repro.serving.server.InferenceServer` — streaming submit/cancel
+  frontend with named SLO classes (``interactive``/``standard``/``batch``).
+* ``EngineCore.serve()`` — offline compatibility wrapper (full request list
+  in, blocking, identical greedy tokens and readback count).
+
+(Import from the submodules directly — ``repro.core.scheduler`` imports
+``repro.serving.request``, so re-exporting the engine here would close an
+import cycle.)
+"""

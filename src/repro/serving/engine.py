@@ -37,11 +37,25 @@ one round late, at the readback that proves the round finished). On CPU the
 engine serves the reduced-config models (the examples use it); on TPU the
 same loop drives the sharded step functions with the Pallas kernels
 underneath.
+
+The engine is **step-based** (vLLM/sglang-style online core): requests enter
+continuously via ``add_request(req, prompt)``, leave via ``abort(rid)``, and
+``step()`` runs exactly one scheduler round — admission, scheduling, the
+fused dispatches, and the deferred one-readback-per-round flush — returning
+the round's :class:`EngineEvent` list (QUEUED / ADMITTED / FIRST_TOKEN /
+TOKEN / FINISHED / EVICTED / ABORTED, each with a timestamp and, for
+token-bearing events, the token id). Token-bearing events of a paged round
+surface one ``step()`` late, at the flush that reads the round's ids back.
+``serve()`` is a thin offline compatibility wrapper that feeds a request
+list through the same ``step()`` loop; ``repro.serving.server`` hosts the
+streaming submit/cancel frontend.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
+import heapq
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -88,6 +102,32 @@ def _pow2(n: int, lo: int = 1) -> int:
     return b
 
 
+class EventKind(enum.Enum):
+    QUEUED = "queued"            # request handed to the engine (arrival)
+    ADMITTED = "admitted"        # KV/slot reserved; request is executable
+    FIRST_TOKEN = "first_token"  # first output token (token id attached)
+    TOKEN = "token"              # subsequent output token (token id attached)
+    FINISHED = "finished"        # reason: "length" (max_output) | "stop" (EOS)
+    EVICTED = "evicted"          # relegated by KV pressure; will re-prefill
+    ABORTED = "aborted"          # cancelled via EngineCore.abort()
+
+
+@dataclasses.dataclass
+class EngineEvent:
+    """One request-lifecycle transition, as observed by ``step()``.
+
+    ``t`` is seconds on the engine clock (``EngineCore.now()``). For
+    FIRST_TOKEN/TOKEN it is the *readback* time — when the id became
+    host-visible — which for overlapped paged rounds is one round after
+    dispatch."""
+
+    kind: EventKind
+    rid: int
+    t: float
+    token: Optional[int] = None
+    reason: str = ""
+
+
 @dataclasses.dataclass
 class EngineStats:
     iterations: int = 0
@@ -95,6 +135,7 @@ class EngineStats:
     decode_calls: int = 0
     compiled_shapes: int = 0
     evictions: int = 0
+    aborted: int = 0              # requests cancelled via abort()
     max_concurrency: int = 0      # peak simultaneously-admitted requests
     max_round_calls: int = 0      # peak model dispatches in one scheduler round
     # ---- zero-sync hot-path accounting (paged mode) --------------------------
@@ -120,8 +161,15 @@ class _InflightRound:
     stamped: List = dataclasses.field(default_factory=list)
 
 
-class ServingEngine:
-    """Continuous-batching engine executing a real model.
+class EngineCore:
+    """Continuous-batching engine core executing a real model, driven one
+    scheduler round at a time.
+
+    Lifecycle: ``add_request(req, prompt)`` → ``step()`` (repeat while
+    ``has_work()``) → per-round ``EngineEvent`` lists. ``abort(rid)`` cancels
+    a request at any stage, releasing its KV pages / slot immediately.
+    ``serve(requests)`` is the offline compatibility wrapper over the same
+    loop (identical greedy tokens, identical readback count).
 
     ``cache_mode``: ``"paged"`` | ``"slot"`` | ``"auto"`` (paged where the
     architecture supports it — see ``supports_paged_cache``).
@@ -157,7 +205,21 @@ class ServingEngine:
         self._resumed: set = set()    # evicted mid-decode; re-prefill, no emit
         self._round_calls = 0
         self._last_round_evictions = 0
-        self._t0 = 0.0
+        self._t0 = time.perf_counter()
+
+        # ---- step-API state (the former serve()-loop locals) ----------------
+        self._pending: List[Tuple[float, int, Request]] = []  # future arrivals
+        self._seq = 0                                  # heap tie-break counter
+        self._queued: collections.deque = collections.deque()  # arrived, no KV
+        self._active: List[Request] = []                        # KV-resident
+        self._done: List[Request] = []                          # FINISHED
+        self._aborted: List[Request] = []                       # ABORTED
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._reqs: Dict[int, Request] = {}     # rid -> live (unretired) req
+        self._events: List[EngineEvent] = []
+        self._progress = "idle"   # what the last step() did: "executed" |
+                                  # "empty" | "no-decision" | "idle"
+        self._inflight: Optional[_InflightRound] = None
 
         if cache_mode == "paged":
             capacity = kv_capacity_tokens or max_slots * max_len
@@ -171,7 +233,6 @@ class ServingEngine:
             self._trash_slot = self.alloc.num_blocks * page_size
             self._length: Dict[int, int] = {}     # tokens resident per rid
             self._folded: Dict[int, int] = {}     # gen tokens folded on evict
-            self._inflight: Optional[_InflightRound] = None
             self._dev_cache: Dict[Tuple, Tuple[np.ndarray, jnp.ndarray]] = {}
             rctx_ = self.rctx
 
@@ -194,6 +255,292 @@ class ServingEngine:
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    def now(self) -> float:
+        """Seconds on the engine clock (what event timestamps and request
+        arrivals are measured against)."""
+        return self._now()
+
+    # =========================================================================
+    # step API: add_request / abort / step / has_work
+    # =========================================================================
+    def _event(self, kind: EventKind, rid: int, t: float,
+               token: Optional[int] = None, reason: str = "") -> None:
+        self._events.append(EngineEvent(kind, rid, t, token, reason))
+
+    def _drain_events(self) -> List[EngineEvent]:
+        evts, self._events = self._events, []
+        return evts
+
+    def add_request(self, req: Request, prompt: Sequence[int]) -> None:
+        """Hand a request to the engine. ``req.arrival`` is on the engine
+        clock: a future arrival is held back (the offline wrapper's replayed
+        traces), a past/now arrival joins the admission queue immediately."""
+        assert req.rid not in self._reqs, f"duplicate rid {req.rid}"
+        # transcripts (_tokens_out) outlive retirement — serve() exposes
+        # them — so recycling a finished request's rid would splice two
+        # streams together (and feed the old stream's last token into the
+        # new stream's first decode). Fail loudly instead.
+        assert req.rid not in self._tokens_out, \
+            f"rid {req.rid} reuses a finished request's id on this engine"
+        self._reqs[req.rid] = req
+        self._prompts[req.rid] = np.asarray(prompt, np.int32)
+        if req.arrival > self._now():
+            heapq.heappush(self._pending, (req.arrival, self._seq, req))
+            self._seq += 1
+        else:
+            self._queued.append(req)
+            self._event(EventKind.QUEUED, req.rid, self._now())
+
+    def abort(self, rid: int) -> List[EngineEvent]:
+        """Cancel a request at any stage: drop it from the arrival/admission
+        queues, or free its KV pages / slot if it is mid-prefill or
+        mid-decode. Returns the events this produced (the in-flight round is
+        flushed first when it references the request, so its final TOKEN
+        events surface here too)."""
+        r = self._reqs.get(rid)
+        if r is None or r.state in (ReqState.FINISHED, ReqState.ABORTED):
+            return []
+        if any(e[2].rid == rid for e in self._pending):
+            self._pending = [e for e in self._pending if e[2].rid != rid]
+            heapq.heapify(self._pending)
+        try:
+            self._queued.remove(r)
+        except ValueError:
+            pass
+        if r in self._active:
+            # settle the in-flight round first when it will *emit* for this
+            # request (this is that round's one readback happening early, not
+            # an extra sync). A non-emitting row — mid-prefill, or a WAITING
+            # request with no row at all — needs no flush: its page writes
+            # land before any later owner of the pages writes them.
+            fr = self._inflight
+            if fr is not None and any(x == rid for x, _ in fr.emits):
+                self._flush_round()
+                if r.state == ReqState.FINISHED:  # the flush finished it (stop)
+                    return self._drain_events()
+        r.state = ReqState.ABORTED
+        r.finish_time = self._now()
+        self._retire(r)
+        self._aborted.append(r)
+        self.stats.aborted += 1
+        self._event(EventKind.ABORTED, rid, self._now())
+        return self._drain_events()
+
+    def has_work(self) -> bool:
+        """True while any request is pending/queued/active or a dispatched
+        round still awaits its readback (the final tokens)."""
+        return bool(self._pending or self._queued or self._active
+                    or self._inflight is not None)
+
+    @property
+    def progress(self) -> str:
+        """What the last ``step()`` accomplished: ``"executed"`` (a round
+        ran), ``"empty"`` (decision evicted away), ``"no-decision"``, or
+        ``"idle"`` — drivers use this to pace sleeps and detect wedges."""
+        return self._progress
+
+    def next_arrival(self) -> Optional[float]:
+        """Engine-clock time of the earliest not-yet-due request, or None.
+        Idle drivers sleep until this instead of polling."""
+        return self._pending[0][0] if self._pending else None
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests that have arrived but hold no KV yet (admission queue)."""
+        return len(self._queued)
+
+    @property
+    def last_round_evictions(self) -> int:
+        """Evictions the most recent executed round caused (wedge guards use
+        this: an empty round that also evicted nothing cannot make progress
+        by itself)."""
+        return self._last_round_evictions
+
+    def stalled(self) -> bool:
+        """Wedge predicate shared by every driver: the last ``step()`` made
+        no progress and nothing external will change that — an empty round
+        that evicted nothing (a request outgrew total capacity), or an idle
+        engine holding queued-but-unadmittable work with no future arrivals.
+        Drivers bail after a few consecutive True results instead of
+        spinning to their wall clock."""
+        if self._progress == "empty" and self._last_round_evictions == 0:
+            return True
+        return (self._progress == "idle" and not self._pending
+                and bool(self._queued))
+
+    def flush(self) -> List[EngineEvent]:
+        """Settle any in-flight round now (its one readback happens early,
+        not extra) and return the events that surfaced. Drivers call this on
+        abnormal exits (wall budget, wedge) so the final round's tokens are
+        never stranded on device."""
+        self._flush_round()
+        return self._drain_events()
+
+    def _retire(self, r: Request) -> None:
+        """Release a request's execution resources (idempotent)."""
+        if self.cache_mode == "paged":
+            if r.rid in self.alloc.owners:
+                self.alloc.free(r.rid)
+            self._length.pop(r.rid, None)
+            self._folded.pop(r.rid, None)
+        else:
+            self._release_slot(r)
+        self._resumed.discard(r.rid)
+        if r in self._active:
+            self._active.remove(r)
+        self._reqs.pop(r.rid, None)
+        # drop the prompt array — the dominant per-request memory. Token
+        # transcripts (_tokens_out) and the _done list are intentionally
+        # kept: serve()'s return contract exposes them after retirement.
+        self._prompts.pop(r.rid, None)
+
+    def _admit(self) -> None:
+        """Move due arrivals into the admission queue, then admit FIFO while
+        the free pool lasts (full-prompt + decode-reserve reservation)."""
+        paged = self.cache_mode == "paged"
+        while self._pending and self._pending[0][0] <= self._now():
+            _, _, r = heapq.heappop(self._pending)
+            self._queued.append(r)
+            self._event(EventKind.QUEUED, r.rid, r.arrival)
+        # O(1) short-circuit: with the free pool exhausted no admission can
+        # succeed, so skip the scan entirely (the common state while
+        # saturated — this is what keeps admission off the hot path).
+        exhausted = (self.alloc.free_blocks == 0 if paged
+                     else not self.free_slots)
+        if self._queued and not exhausted:
+            failures = 0
+            for _ in range(len(self._queued)):
+                r = self._queued.popleft()
+                if paged:
+                    # admission *reserves* the full prompt + decode headroom
+                    # so concurrent admits are gated by the same free pool
+                    # (admit(rid, 0) would let every fitting prompt in at
+                    # once and convert admission control into evict thrash)
+                    ok = self.alloc.admit(
+                        r.rid, r.remaining_prefill() + self.decode_reserve)
+                else:
+                    ok = self._assign_slot(r) is not None
+                if ok:
+                    self._active.append(r)
+                    if paged:
+                        self._length[r.rid] = 0
+                    self._event(EventKind.ADMITTED, r.rid, self._now())
+                else:
+                    self._queued.append(r)
+                    failures += 1
+                if paged and self.alloc.free_blocks == 0:
+                    # pool just drained: rotate the failures back to the
+                    # front so FIFO order survives the early exit.
+                    self._queued.rotate(failures)
+                    break
+        self.stats.max_concurrency = max(self.stats.max_concurrency,
+                                         len(self._active))
+
+    def step(self) -> List[EngineEvent]:
+        """Run one scheduler round: admit, schedule, dispatch (≤2 fused model
+        calls in paged mode), and flush the *previous* round's deferred
+        readback. Returns the events that settled during this call; an idle
+        step (nothing admitted or schedulable) flushes any in-flight round so
+        the final tokens always surface."""
+        paged = self.cache_mode == "paged"
+        self._admit()
+        if not self._active:
+            self._flush_round()         # device is idle anyway
+            self._progress = "idle"
+            return self._drain_events()
+
+        # admitted-but-unstarted requests are offered as ``waiting`` so MLPS
+        # ordering applies to them (they are executable immediately).
+        waiting = [r for r in self._active if r.state == ReqState.WAITING]
+        prefilling = [r for r in self._active
+                      if r.state == ReqState.PREFILLING]
+        decoding = [r for r in self._active if r.state == ReqState.DECODING]
+        kv = self._kv_pressure() if paged else None
+        decision = self.sched.schedule(self._now(), waiting, prefilling,
+                                       decoding, kv=kv)
+        if decision is None:
+            self._flush_round()
+            self._progress = "no-decision"
+            return self._drain_events()
+
+        self._round_calls = 0
+        it0 = time.perf_counter()
+        executed = (self._execute_paged(decision) if paged
+                    else self._execute_slot(decision))
+        if not executed:
+            # every entry was evicted away (severe KV pressure): the driver
+            # should yield so re-admission can make progress.
+            self._flush_round()
+            self._progress = "empty"
+            return self._drain_events()
+        self._progress = "executed"
+        latency = time.perf_counter() - it0
+        t_now = self._now()
+        self.stats.iterations += 1
+        self.stats.max_round_calls = max(self.stats.max_round_calls,
+                                         self._round_calls)
+
+        executed_batch = []
+        stamped = []
+        for r, n, ctx in executed:
+            if r.state in (ReqState.FINISHED, ReqState.ABORTED):
+                # finished by the flush inside execute (stop token): its row
+                # this round was dead — nothing to advance or emit.
+                continue
+            executed_batch.append((n, ctx))
+            emitted = False
+            was_first = r.first_token_time is None
+            if r.state == ReqState.DECODING:
+                r.emit_token(t_now)
+                emitted = True
+            else:
+                r.advance_prefill(n)
+                if r.remaining_prefill() == 0:
+                    if r.rid in self._resumed:
+                        # re-prefill after eviction: the pending token was
+                        # already emitted; resume decoding silently.
+                        self._resumed.discard(r.rid)
+                        r.state = ReqState.DECODING
+                    else:
+                        r.emit_token(t_now)
+                        emitted = True
+            if emitted:
+                if paged:
+                    # token value is on device; events settle at the flush.
+                    stamped.append((r, len(r.token_times) - 1, was_first,
+                                    r.state == ReqState.FINISHED))
+                else:
+                    # slot mode syncs per round: ids are host-visible now.
+                    tok = self._tokens_out[r.rid][-1]
+                    reason = "length"
+                    if r.state != ReqState.FINISHED and r.hits_stop(tok):
+                        r.state = ReqState.FINISHED
+                        r.finish_time = t_now
+                        reason = "stop"
+                    self._event(EventKind.FIRST_TOKEN if was_first
+                                else EventKind.TOKEN, r.rid, t_now, token=tok)
+                    if r.state == ReqState.FINISHED:
+                        self._event(EventKind.FINISHED, r.rid, t_now,
+                                    reason=reason)
+            if r.state == ReqState.FINISHED:
+                self._retire(r)
+                self._done.append(r)
+        if paged:
+            # readback + observe happen at the next round's flush; the
+            # executed batch is recorded on the in-flight round so the
+            # observation reflects what actually ran (post split/clamp).
+            if self._inflight is not None:
+                self._inflight.executed_batch = executed_batch
+                self._inflight.stamped = stamped
+            self.alloc.check_invariants()
+            if not self.overlap:
+                self._flush_round()
+        else:
+            # close the loop on what actually ran (post split/clamp), not
+            # on what the decision asked for.
+            self.sched.observe(executed_batch, latency, kv=None)
+        return self._drain_events()
 
     # =========================================================================
     # slot mode (legacy contiguous rows; recurrent / MLA / enc-dec archs)
@@ -334,8 +681,7 @@ class ServingEngine:
                           free_tokens=capacity - computed,
                           evictions=self._last_round_evictions)
 
-    def _evict(self, victim: Request, active: List[Request],
-               queued, prompts: Dict[int, np.ndarray]) -> None:
+    def _evict(self, victim: Request) -> None:
         """Relegate ``victim`` (recompute-on-resume): drop its pages and fold
         already-emitted tokens into its prompt so re-prefill reconstructs the
         exact cache state and greedy decoding continues deterministically."""
@@ -344,8 +690,12 @@ class ServingEngine:
         # early (this round's one readback just happens now instead of at
         # dispatch time; eviction is the rare path).
         self._flush_round()
+        if victim.rid not in self.alloc.owners:
+            return      # the flush just finished it (stop token) — no victim
+        prompts = self._prompts
         self.alloc.evict(victim.rid)
         self.stats.evictions += 1
+        self._event(EventKind.EVICTED, victim.rid, self._now())
         gen = self._tokens_out.get(victim.rid, [])
         if victim.generated > 0:
             # cache held prompt + gen[:-1] (the newest token was emitted but
@@ -366,19 +716,17 @@ class ServingEngine:
         victim.prefilled = 0
         victim.state = ReqState.WAITING
         self._length.pop(victim.rid, None)
-        if victim in active:
-            active.remove(victim)
-        queued.append(victim)
+        if victim in self._active:
+            self._active.remove(victim)
+        self._queued.append(victim)
 
     def _grow_or_evict(self, req: Request, new_tokens: int,
-                       active: List[Request], queued,
-                       prompts: Dict[int, np.ndarray],
                        protected: set) -> bool:
         """Grow ``req``'s allocation, evicting lowest-priority owners (newest
         arrival first, preferring requests outside the current decision) until
         it fits. Returns False if capacity is exhausted even after evicting
         every other owner."""
-        by_rid = {r.rid: r for r in active}
+        by_rid = {r.rid: r for r in self._active}
         while not self.alloc.grow(req.rid, new_tokens):
             vid = self.alloc.pick_victim(
                 req.rid,
@@ -386,7 +734,7 @@ class ServingEngine:
                                       by_rid[rid].arrival if rid in by_rid else 0.0))
             if vid is None or vid not in by_rid:
                 return False
-            self._evict(by_rid.pop(vid), active, queued, prompts)
+            self._evict(by_rid.pop(vid))
         return True
 
     # ---- zero-sync plumbing --------------------------------------------------
@@ -401,7 +749,9 @@ class ServingEngine:
     def _flush_round(self) -> None:
         """Materialize the in-flight round: one token-id readback, then append
         emitted ids to ``_tokens_out``, correct provisional timestamps to
-        completion time, and feed the scheduler's observe()."""
+        completion time, emit token events, decide stop-token termination
+        (the ids are host-visible only here — EOS detection costs no extra
+        sync), and feed the scheduler's observe()."""
         fr = self._inflight
         if fr is None:
             return
@@ -410,22 +760,39 @@ class ServingEngine:
         joined = fr.toks[0] if len(fr.toks) == 1 else jnp.concatenate(fr.toks)
         if self.overlap:
             vals = self._readback(joined)
-            for rid, idx in fr.emits:
-                self._tokens_out.setdefault(rid, []).append(int(vals[idx]))
+            toks = {idx: int(vals[idx]) for _, idx in fr.emits}
         else:
             # legacy profile: one scalar transfer per emitting row, like the
             # pre-zero-sync engine's per-row ``int(jnp.argmax(logits[i]))``.
-            for rid, idx in fr.emits:
-                tok = int(self._readback(joined[idx]))
-                self._tokens_out.setdefault(rid, []).append(tok)
+            toks = {idx: int(self._readback(joined[idx]))
+                    for _, idx in fr.emits}
         self.stats.sync_s += time.perf_counter() - t0
         t_done = self._now()
-        for r, k, was_first, was_finish in fr.stamped:
+        by_rid = {r.rid: (r, k, wf, fin) for r, k, wf, fin in fr.stamped}
+        for rid, idx in fr.emits:
+            tok = toks[idx]
+            self._tokens_out.setdefault(rid, []).append(tok)
+            entry = by_rid.get(rid)
+            if entry is None:
+                continue
+            r, k, was_first, was_finish = entry
             r.token_times[k] = t_done
             if was_first:
                 r.first_token_time = t_done
+            self._event(EventKind.FIRST_TOKEN if was_first
+                        else EventKind.TOKEN, rid, t_done, token=tok)
             if was_finish:
                 r.finish_time = t_done
+                self._event(EventKind.FINISHED, rid, t_done, reason="length")
+            elif r.state == ReqState.DECODING and r.hits_stop(tok):
+                # stop-token termination, decided from the deferred readback.
+                # The request may already sit in the next round's assembled
+                # batch; that row executes dead (trash write, no emit).
+                r.state = ReqState.FINISHED
+                r.finish_time = t_done
+                self._retire(r)
+                self._done.append(r)
+                self._event(EventKind.FINISHED, rid, t_done, reason="stop")
         latency = time.perf_counter() - fr.t_dispatch
         # dispatch->flush intervals are disjoint (the next dispatch happens
         # only after this flush), so their sum is the wall time covered by an
@@ -572,182 +939,69 @@ class ServingEngine:
             self.stats.compiled_shapes += 1
 
     # =========================================================================
-    # main loop (shared by both cache modes)
+    # offline compatibility wrapper (shared by both cache modes)
     # =========================================================================
     def serve(self, requests: Sequence[Request],
               prompts: Optional[Dict[int, np.ndarray]] = None,
               max_wall_s: float = 300.0) -> Dict:
-        """Serve requests (arrival times are wall-clock offsets from start)."""
+        """Serve a complete request list (arrival times are wall-clock
+        offsets from this call) and block until everything finishes.
+
+        Thin wrapper over the step API: resets the engine clock, feeds every
+        request through ``add_request``, and drives ``step()`` — sleeping
+        between arrivals and yielding briefly on empty rounds, exactly as the
+        pre-step monolithic loop did. Greedy tokens and the
+        one-readback-per-round count are identical to driving ``step()``
+        directly. The engine must be drained — resetting the clock under
+        live requests would corrupt their arrival-relative deadlines."""
+        assert not self.has_work(), \
+            "serve() on an engine with live requests (drain or use step())"
         rng = np.random.default_rng(0)
         prompts = prompts or {
             r.rid: rng.integers(0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
             for r in requests
         }
-        # evict-and-recompute rebinds prompt entries (folding emitted tokens
-        # into the recompute prompt); copy so the caller's dict stays intact
-        prompts = dict(prompts)
-        paged = self.cache_mode == "paged"
         self._t0 = time.perf_counter()
         busy0 = self.stats.device_busy_s    # stats accumulate across serve()s
-        now = self._now
-        # arrival-indexed cursor over the sorted arrivals: admission is O(new
-        # arrivals), not O(still-pending), so host cost stays flat with
-        # thousands of queued requests.
-        arrivals = sorted(requests, key=lambda r: r.arrival)
-        pend_i = 0
-        queued: collections.deque = collections.deque()   # arrived, no KV
-        active: List[Request] = []                        # KV-resident
-        done: List[Request] = []
-
-        def admit() -> None:
-            nonlocal pend_i
-            while pend_i < len(arrivals) and arrivals[pend_i].arrival <= now():
-                queued.append(arrivals[pend_i])
-                pend_i += 1
-            # O(1) short-circuit: with the free pool exhausted no admission
-            # can succeed, so skip the scan entirely (the common state while
-            # saturated — this is what keeps admit() off the hot path).
-            exhausted = (self.alloc.free_blocks == 0 if paged
-                         else not self.free_slots)
-            if queued and not exhausted:
-                failures = 0
-                for _ in range(len(queued)):
-                    r = queued.popleft()
-                    if paged:
-                        # admission *reserves* the full prompt + decode
-                        # headroom so concurrent admits are gated by the same
-                        # free pool (admit(rid, 0) would let every fitting
-                        # prompt in at once and convert admission control
-                        # into evict thrash)
-                        ok = self.alloc.admit(
-                            r.rid, r.remaining_prefill() + self.decode_reserve)
-                    else:
-                        ok = self._assign_slot(r) is not None
-                    if ok:
-                        active.append(r)
-                        if paged:
-                            self._length[r.rid] = 0
-                    else:
-                        queued.append(r)
-                        failures += 1
-                    if paged and self.alloc.free_blocks == 0:
-                        # pool just drained: rotate the failures back to the
-                        # front so FIFO order survives the early exit.
-                        queued.rotate(failures)
-                        break
-            self.stats.max_concurrency = max(self.stats.max_concurrency,
-                                             len(active))
+        done0 = len(self._done)
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.add_request(r, prompts[r.rid])
 
         empty_rounds = 0
-        while (pend_i < len(arrivals) or queued or active) \
-                and now() < max_wall_s:
-            admit()
-            if not active:
-                if paged:
-                    self._flush_round()     # device is idle anyway
-                if pend_i < len(arrivals):
-                    time.sleep(max(arrivals[pend_i].arrival - now(), 0.0)
-                               + 1e-4)
-                    continue
-                if queued:   # arrived but nothing fits: engine is wedged
-                    break
-                continue
-
-            # admitted-but-unstarted requests are offered as ``waiting`` so
-            # MLPS ordering applies to them (they are executable immediately).
-            waiting = [r for r in active if r.state == ReqState.WAITING]
-            prefilling = [r for r in active if r.state == ReqState.PREFILLING]
-            decoding = [r for r in active if r.state == ReqState.DECODING]
-            kv = self._kv_pressure() if paged else None
-            decision = self.sched.schedule(now(), waiting, prefilling,
-                                           decoding, kv=kv)
-            if decision is None:
-                if paged:
-                    self._flush_round()
-                time.sleep(1e-3)
-                continue
-
-            self._round_calls = 0
-            it0 = time.perf_counter()
-            executed = (self._execute_paged(decision, active, queued, prompts)
-                        if paged else
-                        self._execute_slot(decision, prompts))
-            if not executed:
+        while self.has_work() and self._now() < max_wall_s:
+            self.step()
+            if self._progress == "executed":
+                empty_rounds = 0
+            elif self._progress == "empty":
                 # every entry was evicted away (severe KV pressure): yield so
                 # re-admission can make progress — but if no eviction changed
                 # any state either, the engine is wedged (e.g. a lone request
                 # outgrew total capacity); bail instead of spinning to the
                 # wall clock.
-                if paged:
-                    self._flush_round()
                 empty_rounds += 1
                 if self._last_round_evictions == 0 and empty_rounds >= 8:
                     break
                 time.sleep(1e-3)
-                continue
-            empty_rounds = 0
-            latency = time.perf_counter() - it0
-            t_now = now()
-            self.stats.iterations += 1
-            self.stats.max_round_calls = max(self.stats.max_round_calls,
-                                             self._round_calls)
+            elif self._progress == "no-decision":
+                time.sleep(1e-3)
+            else:   # idle: nothing admitted/admissible (in-flight is flushed)
+                if self._pending:
+                    time.sleep(max(self._pending[0][0] - self._now(), 0.0)
+                               + 1e-4)
+                elif self._queued:   # arrived but nothing fits: wedged
+                    break
 
-            executed_batch = []
-            stamped = []
-            for r, n, ctx in executed:
-                executed_batch.append((n, ctx))
-                emitted = False
-                was_first = r.first_token_time is None
-                if r.state == ReqState.DECODING:
-                    r.emit_token(t_now)
-                    emitted = True
-                else:
-                    r.advance_prefill(n)
-                    if r.remaining_prefill() == 0:
-                        if r.rid in self._resumed:
-                            # re-prefill after eviction: the pending token was
-                            # already emitted; resume decoding silently.
-                            self._resumed.discard(r.rid)
-                            r.state = ReqState.DECODING
-                        else:
-                            r.emit_token(t_now)
-                            emitted = True
-                if emitted and paged:
-                    stamped.append((r, len(r.token_times) - 1, was_first,
-                                    r.state == ReqState.FINISHED))
-                if r.state == ReqState.FINISHED:
-                    if paged:
-                        self.alloc.free(r.rid)
-                        self._length.pop(r.rid, None)
-                        self._folded.pop(r.rid, None)
-                    else:
-                        self._release_slot(r)
-                    active.remove(r)
-                    done.append(r)
-            if paged:
-                # readback + observe happen at the next round's flush; the
-                # executed batch is recorded on the in-flight round so the
-                # observation reflects what actually ran (post split/clamp).
-                if self._inflight is not None:
-                    self._inflight.executed_batch = executed_batch
-                    self._inflight.stamped = stamped
-                self.alloc.check_invariants()
-                if not self.overlap:
-                    self._flush_round()
-            else:
-                # close the loop on what actually ran (post split/clamp), not
-                # on what the decision asked for.
-                self.sched.observe(executed_batch, latency, kv=None)
-
-        if paged:
-            self._flush_round()
-        wall = now()
+        # the final flush's events have no step() caller to collect them;
+        # drop them so a later driver of this engine doesn't receive stale
+        # TOKEN/FINISHED events for long-gone requests.
+        self.flush()
+        wall = self._now()
         # host_s is per-serve (this call's wall minus this call's in-flight
         # coverage); the other counters are cumulative across serve() calls.
         self.stats.host_s = max(
             wall - (self.stats.device_busy_s - busy0), 0.0)
         return {
-            "finished": done,
+            "finished": self._done[done0:],
             "unfinished": [r for r in requests if r.state != ReqState.FINISHED],
             "stats": self.stats,
             "outputs": dict(self._tokens_out),
@@ -755,7 +1009,7 @@ class ServingEngine:
         }
 
     # ---- per-mode decision execution -----------------------------------------
-    def _execute_slot(self, decision, prompts) -> List[Tuple[Request, int, int]]:
+    def _execute_slot(self, decision) -> List[Tuple[Request, int, int]]:
         executed = []
         decode_reqs = [r for r, n in decision.alloc
                        if r.state == ReqState.DECODING]
@@ -765,17 +1019,17 @@ class ServingEngine:
         for r, n in decision.alloc:
             if r.state != ReqState.DECODING:
                 ctx = r.context_len()
-                n_exec = self._run_prefill_chunk(r, n, prompts[r.rid])
+                n_exec = self._run_prefill_chunk(r, n, self._prompts[r.rid])
                 if n_exec > 0:
                     executed.append((r, n_exec, ctx))
         return executed
 
-    def _execute_paged(self, decision, active, queued, prompts
-                       ) -> List[Tuple[Request, int, int]]:
+    def _execute_paged(self, decision) -> List[Tuple[Request, int, int]]:
         """Grow allocations (evicting under pressure), assemble the round on
         the host while the previous round still runs on device, sync once on
         the previous round's token ids, then dispatch the decision as one
         fused decode + one fused ragged prefill (both async)."""
+        prompts = self._prompts
         protected = {r.rid for r, _ in decision.alloc}
         ev0 = self.alloc.evictions
 
@@ -788,8 +1042,7 @@ class ServingEngine:
             if not is_live(r):
                 continue
             if r.state == ReqState.DECODING:
-                if self._grow_or_evict(r, self._length[r.rid] + 1, active,
-                                       queued, prompts, protected):
+                if self._grow_or_evict(r, self._length[r.rid] + 1, protected):
                     decode_rows.append(r)
             else:
                 n_exec = min(n, r.remaining_prefill())
@@ -799,8 +1052,7 @@ class ServingEngine:
                 # admission reserved the full remaining prompt, so this grow
                 # is a no-op today; it stays so a future partial-reservation
                 # admission policy still allocates (or skips) correctly.
-                if not self._grow_or_evict(r, start + n_exec, active, queued,
-                                           prompts, protected):
+                if not self._grow_or_evict(r, start + n_exec, protected):
                     continue
                 prefill_rows.append((r, n_exec))
         decode_rows = [r for r in decode_rows if is_live(r)]
@@ -834,16 +1086,30 @@ class ServingEngine:
         for asm in decode_asms:
             # decode inputs are round N's outputs — only now host-visible
             for i, rid in enumerate(asm["rids"]):
+                r = self._reqs.get(rid)
+                if r is None or r.state in (ReqState.FINISHED,
+                                            ReqState.ABORTED):
+                    # the flush above finished this request (stop token): its
+                    # row was assembled before the ids were host-visible —
+                    # execute it dead (KV write to the trash page, no emit).
+                    asm["slots"][i] = self._trash_slot
+                    continue
                 prev = self._tokens_out.get(rid)
                 asm["tokens"][i, 0] = prev[-1] if prev else 0
+                emits.append((rid, off + i))
             toks.append(self._dispatch(asm))
-            emits += [(rid, off + i) for i, rid in enumerate(asm["rids"])]
             off += asm["Rb"]
         for asm in chunk_asms:
             toks.append(self._dispatch(asm))
-            emits += [(rid, off + row) for rid, row in asm["emit_rows"]]
+            emits += [(rid, off + row) for rid, row in asm["emit_rows"]
+                      if rid in self._reqs]
             off += asm["Rb"]
         self.stats.dispatch_s += time.perf_counter() - t_disp
         self._inflight = _InflightRound(toks=toks, emits=emits,
                                         t_dispatch=t_disp)
         return executed
+
+
+# Back-compat name: the engine core was born as the monolithic ServingEngine;
+# existing callers (tests, benchmarks) keep the old import path.
+ServingEngine = EngineCore

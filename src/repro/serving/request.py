@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 
 class ReqState(enum.Enum):
@@ -21,6 +21,7 @@ class ReqState(enum.Enum):
     PREFILLING = "prefilling"
     DECODING = "decoding"
     FINISHED = "finished"
+    ABORTED = "aborted"          # cancelled by the client (EngineCore.abort)
 
 
 @dataclasses.dataclass
@@ -33,6 +34,13 @@ class Request:
     tbt_slo: float                   # seconds between subsequent tokens
     guard: bool = False              # safeguard flag g_i (paper §3.3)
     slo_class: str = "dialogue"
+    # stop-token termination: generation ends early when the sampled token is
+    # ``eos_id`` or any member of ``stop_ids`` (the stop token itself is the
+    # final emitted token). ``max_output`` stays the hard length cap. The
+    # engine checks these against the token ids of its one deferred readback
+    # per round, so stop termination adds no device→host sync.
+    eos_id: Optional[int] = None
+    stop_ids: Tuple[int, ...] = ()
 
     # --- runtime state -------------------------------------------------------
     state: ReqState = ReqState.WAITING
@@ -86,6 +94,11 @@ class Request:
 
     def is_decoding(self) -> bool:
         return self.state == ReqState.DECODING
+
+    def hits_stop(self, token: int) -> bool:
+        """True when ``token`` terminates generation (EOS / stop set)."""
+        return ((self.eos_id is not None and token == self.eos_id)
+                or token in self.stop_ids)
 
     def ttft_violated(self, t: float) -> bool:
         if self.first_token_time is not None:

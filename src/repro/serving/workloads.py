@@ -20,7 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -153,3 +154,78 @@ def make_workload(spec: WorkloadSpec, cost_model: CostModel) -> List[Request]:
             slo_class=TABLE2[name]["slo"], exclusive_ttft=excl,
         ))
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# open-loop live-arrival driver (streaming frontend)
+# ---------------------------------------------------------------------------
+def run_open_loop(server, requests: Sequence[Request],
+                  prompts: Optional[Dict[int, np.ndarray]] = None,
+                  max_wall_s: float = 300.0, seed: int = 0) -> Dict:
+    """Replay a workload through an :class:`InferenceServer` the way live
+    traffic hits a deployment: **open-loop** — each request is submitted at
+    its wall-clock ``arrival`` offset regardless of how far the engine has
+    gotten (arrivals never wait on completions), and the server is pumped in
+    between so admitted work streams continuously.
+
+    This is the live-arrival counterpart of ``EngineCore.serve``: ``serve``
+    hands the engine the complete schedule up front (offline replay), while
+    this driver only reveals each request when its arrival time passes —
+    exactly what the streaming submit API experiences in production.
+
+    SLO clocks run from each request's *scheduled* arrival (``t0 +
+    r.arrival`` on the engine clock), not from when this loop got around to
+    submitting it — submission delay counts as queueing time, exactly as
+    offline ``serve()`` measures it.
+
+    The request objects are **consumed**: their runtime state advances and
+    ``arrival`` is rewritten onto the engine clock. Rebuild the workload
+    list to replay it (as ``bench_goodput`` does); re-passing the same
+    objects would compound the arrival rebase.
+
+    Returns ``{"handles", "finished", "unfinished", "wall", "events"}``;
+    per-request tokens are on each handle (``handle.collected``).
+    """
+    rng = np.random.default_rng(seed)
+    vocab = server.core.cfg.vocab_size
+    prompts = prompts or {
+        r.rid: rng.integers(0, vocab, r.prompt_len).astype(np.int32)
+        for r in requests
+    }
+    order = sorted(requests, key=lambda r: r.arrival)
+    t0 = server.core.now()
+    n_ev0 = len(server.events)
+    handles: Dict[int, object] = {}
+    i = 0
+    t_end = time.perf_counter() + max_wall_s
+    while i < len(order) and time.perf_counter() < t_end:
+        now = server.core.now() - t0
+        while i < len(order) and order[i].arrival <= now:
+            r = order[i]
+            r.arrival = t0 + r.arrival   # workload offset -> engine clock
+            handles[r.rid] = server.submit_request(r, prompts[r.rid])
+            i += 1
+        if i == len(order):
+            break
+        if not server.core.has_work():
+            # nothing to run yet: sleep the gap to the next arrival
+            time.sleep(max(order[i].arrival - (server.core.now() - t0), 0.0)
+                       + 1e-4)
+            continue
+        server.step()
+        if server.core.progress != "executed":
+            # bounded yield so the arrival scan stays responsive (unlike
+            # server.run(), arrivals here are revealed by *this* loop)
+            time.sleep(1e-3)
+    # drain: no more arrivals; server.run finishes what the engine holds
+    # (its stall guard stops a wedged queue from spinning to the wall clock)
+    server.run(max_wall_s=max(t_end - time.perf_counter(), 0.0))
+    finished = [h for h in handles.values()
+                if h.finished and not h.aborted]
+    return {
+        "handles": handles,
+        "finished": finished,
+        "unfinished": [h for h in handles.values() if not h.finished],
+        "wall": server.core.now() - t0,
+        "events": server.events[n_ev0:],
+    }

@@ -1,0 +1,294 @@
+"""Online-API tests: the step-based EngineCore + streaming InferenceServer.
+
+Pins the api_redesign acceptance properties:
+
+* the ``serve()`` compatibility wrapper and a direct ``step()`` loop produce
+  identical per-request greedy tokens AND identical readback counts;
+* cancellation mid-prefill / mid-decode frees KV pages (and slot-mode slots)
+  back to the allocator, leaves other streams' tokens unchanged, and emits
+  an ABORTED event;
+* EOS/stop-token termination is decided from the ids of the existing
+  deferred one-readback-per-round flush — no extra device→host sync;
+* the streaming frontend preserves the zero-sync property: exactly one host
+  readback per executed scheduler round.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SlidingServeScheduler
+from repro.serving.engine import EngineCore, EventKind, ServingEngine
+from repro.serving.request import ReqState, Request
+from repro.serving.server import SLO_CLASSES, InferenceServer
+
+
+def _core(cfg, mode, **kw):
+    kw.setdefault("max_budget", 256)
+    budget = kw.pop("max_budget")
+    sched = SlidingServeScheduler(max_budget=budget, max_iter_time=5.0)
+    if mode == "paged":
+        kw.setdefault("kv_capacity_tokens", 2048)
+    else:
+        kw.setdefault("max_slots", 4)
+        kw.setdefault("max_len", 512)
+    return EngineCore(cfg, sched, cache_mode=mode, seed=0, **kw)
+
+
+def _mk_requests(spec, **req_kw):
+    return [Request(rid=i, arrival=a, prompt_len=p, max_output=o,
+                    ttft_slo=900.0, tbt_slo=900.0, **req_kw)
+            for i, (a, p, o) in enumerate(spec)]
+
+
+def _prompts(cfg, spec, seed=1):
+    rng = np.random.default_rng(seed)
+    return {i: rng.integers(1, cfg.vocab_size, p).astype(np.int32)
+            for i, (_, p, _) in enumerate(spec)}
+
+
+def _drive(core, max_wall_s=600.0):
+    """Minimal direct step() driver (no server): the raw online loop."""
+    events = []
+    t_end = time.perf_counter() + max_wall_s
+    while core.has_work() and time.perf_counter() < t_end:
+        events += core.step()
+        if core.progress != "executed":
+            time.sleep(1e-3)
+    return events
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-3b").smoke()
+
+
+# ---------------------------------------------------------------------------
+# serve() wrapper vs direct step() loop: bit-identical tokens, same syncs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["paged", "slot"])
+def test_serve_wrapper_equals_step_loop(cfg, mode):
+    spec = [(0.0, 24, 4), (0.0, 51, 4), (0.0, 37, 3)]
+    prompts = _prompts(cfg, spec)
+
+    eng_a = _core(cfg, mode)
+    out = eng_a.serve(_mk_requests(spec),
+                      {k: v.copy() for k, v in prompts.items()},
+                      max_wall_s=900.0)
+    assert not out["unfinished"]
+
+    eng_b = _core(cfg, mode)
+    for r in _mk_requests(spec):
+        eng_b.add_request(r, prompts[r.rid].copy())
+    events = _drive(eng_b)
+
+    assert {k: out["outputs"][k] for k in prompts} == \
+        {k: eng_b._tokens_out[k] for k in prompts}
+    # identical sync behaviour: same executed rounds, same readback count
+    assert eng_a.stats.iterations == eng_b.stats.iterations
+    assert eng_a.stats.token_readbacks == eng_b.stats.token_readbacks
+    if mode == "paged":
+        assert eng_b.stats.token_readbacks == eng_b.stats.iterations
+    # every request's lifecycle surfaced as events
+    for rid in prompts:
+        kinds = [e.kind for e in events if e.rid == rid]
+        assert kinds.count(EventKind.FINISHED) == 1
+        n_toks = len([k for k in kinds
+                      if k in (EventKind.FIRST_TOKEN, EventKind.TOKEN)])
+        assert n_toks == spec[rid][2]
+        assert kinds.count(EventKind.FIRST_TOKEN) == 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation: pages/slots freed, other streams unchanged, ABORTED emitted
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["paged", "slot"])
+def test_cancel_mid_decode(cfg, mode):
+    spec = [(0.0, 24, 6), (0.0, 51, 4), (0.0, 37, 3)]
+    prompts = _prompts(cfg, spec)
+    # reference: nobody cancelled
+    ref = _core(cfg, mode).serve(_mk_requests(spec),
+                                 {k: v.copy() for k, v in prompts.items()},
+                                 max_wall_s=900.0)
+    assert not ref["unfinished"]
+
+    core = _core(cfg, mode)
+    server = InferenceServer(core)
+    handles = {r.rid: server.submit_request(r, prompts[r.rid].copy())
+               for r in _mk_requests(spec)}
+    victim = handles[0]
+    # pump until the victim is mid-decode (>=1 token out, not finished)
+    for _ in range(10_000):
+        server.step()
+        if len(victim.collected) >= 1 and not victim.finished:
+            break
+        if core.progress != "executed":
+            time.sleep(1e-3)
+    assert victim.collected and not victim.finished, "never reached mid-decode"
+    victim.cancel()
+    assert victim.aborted and victim.finish_reason == "aborted"
+    assert any(e.kind is EventKind.ABORTED and e.rid == 0
+               for e in server.events)
+    server.run(max_wall_s=600.0)
+
+    # other streams are token-identical to the uncancelled reference
+    for rid in (1, 2):
+        assert handles[rid].collected == ref["outputs"][rid]
+        assert handles[rid].finish_reason == "length"
+    # the victim's resources went back to the allocator immediately; after
+    # the drain *everything* is back
+    if mode == "paged":
+        assert core.alloc.free_blocks == core.alloc.num_blocks
+        core.alloc.check_invariants()
+    else:
+        assert sorted(core.free_slots) == list(range(core.max_slots))
+    assert core.stats.aborted == 1
+    assert not core.has_work()
+
+
+def test_cancel_mid_prefill_frees_reservation(cfg):
+    # small budget so the 120-token prompt needs several prefill rounds
+    spec = [(0.0, 120, 4), (0.0, 32, 3)]
+    prompts = _prompts(cfg, spec, seed=7)
+    ref = _core(cfg, "paged", max_budget=48).serve(
+        _mk_requests(spec), {k: v.copy() for k, v in prompts.items()},
+        max_wall_s=900.0)
+    assert not ref["unfinished"]
+
+    core = _core(cfg, "paged", max_budget=48)
+    server = InferenceServer(core)
+    handles = {r.rid: server.submit_request(r, prompts[r.rid].copy())
+               for r in _mk_requests(spec)}
+    victim = handles[0].request
+    for _ in range(10_000):
+        server.step()
+        if 0 < victim.prefilled < victim.prompt_len:
+            break
+        if core.progress != "executed":
+            time.sleep(1e-3)
+    assert 0 < victim.prefilled < victim.prompt_len, "never mid-prefill"
+    blocks_held = core.alloc.owners[0].blocks
+    assert blocks_held > 0
+    free_before = core.alloc.free_blocks
+    handles[0].cancel()
+    # admission reserved prompt+decode headroom; all of it returns on abort
+    assert core.alloc.free_blocks == free_before + blocks_held
+    assert not handles[0].collected, "mid-prefill victim emitted tokens"
+    server.run(max_wall_s=600.0)
+    assert handles[1].collected == ref["outputs"][1]
+    assert core.alloc.free_blocks == core.alloc.num_blocks
+    assert not core.has_work()
+
+
+# ---------------------------------------------------------------------------
+# EOS / stop-token termination on the deferred readback
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mode", ["paged", "slot"])
+def test_stop_token_terminates_early(cfg, mode):
+    spec = [(0.0, 24, 6), (0.0, 51, 4)]
+    prompts = _prompts(cfg, spec)
+    ref_eng = _core(cfg, mode)
+    ref = ref_eng.serve(_mk_requests(spec),
+                        {k: v.copy() for k, v in prompts.items()},
+                        max_wall_s=900.0)
+    assert not ref["unfinished"]
+    # stop on request 0's 2nd greedy token: generation must end right there,
+    # with the stop token included as the final emitted token
+    stop_tok = ref["outputs"][0][1]
+    cut = ref["outputs"][0].index(stop_tok) + 1   # first occurrence wins
+
+    eng = _core(cfg, mode)
+    reqs = _mk_requests(spec)
+    reqs[0].eos_id = stop_tok
+    out = eng.serve(reqs, {k: v.copy() for k, v in prompts.items()},
+                    max_wall_s=900.0)
+    assert not out["unfinished"]
+    assert out["outputs"][0] == ref["outputs"][0][:cut]
+    assert reqs[0].state == ReqState.FINISHED
+    assert reqs[0].generated == cut
+    # the other stream is untouched
+    assert out["outputs"][1] == ref["outputs"][1]
+    if mode == "paged":
+        # EOS rode the existing per-round readback: still exactly one
+        # device->host sync per executed round, and no KV leak
+        assert eng.stats.token_readbacks == eng.stats.iterations
+        assert eng.alloc.free_blocks == eng.alloc.num_blocks
+        eng.alloc.check_invariants()
+
+
+def test_stop_ids_and_finish_reason_event(cfg):
+    spec = [(0.0, 24, 6)]
+    prompts = _prompts(cfg, spec)
+    ref = _core(cfg, "paged").serve(
+        _mk_requests(spec), {k: v.copy() for k, v in prompts.items()},
+        max_wall_s=900.0)
+    stop_tok = ref["outputs"][0][2]
+    cut = ref["outputs"][0].index(stop_tok) + 1
+
+    core = _core(cfg, "paged")
+    server = InferenceServer(core)
+    h = server.submit(prompts[0].copy(), slo_class="batch", max_output=6,
+                      stop_ids=(stop_tok,))
+    toks = h.result()
+    assert toks == ref["outputs"][0][:cut]
+    assert h.finish_reason == "stop"
+    fin = [e for e in server.events if e.kind is EventKind.FINISHED]
+    assert len(fin) == 1 and fin[0].reason == "stop"
+
+
+# ---------------------------------------------------------------------------
+# zero-sync property under the streaming frontend
+# ---------------------------------------------------------------------------
+def test_streaming_single_readback_per_round(cfg):
+    """Exactly one token-id device->host readback per executed scheduler
+    round while the engine is driven by submit/cancel streaming — the
+    frontend must not add syncs to the paged hot path."""
+    rng = np.random.default_rng(5)
+    spec = [(0.0, int(rng.integers(16, 48)), 3) for _ in range(6)]
+    prompts = _prompts(cfg, spec, seed=5)
+
+    calls = []
+    orig = EngineCore._readback
+
+    def spy(self, arr):
+        calls.append(np.shape(arr))
+        return orig(self, arr)
+
+    EngineCore._readback = spy
+    try:
+        core = _core(cfg, "paged", kv_capacity_tokens=4096)
+        server = InferenceServer(core)
+        handles = [server.submit(prompts[i].copy(), slo_class="interactive",
+                                 max_output=spec[i][2]) for i in range(6)]
+        outs = [h.result() for h in handles]
+    finally:
+        EngineCore._readback = orig
+    st = core.stats
+    assert len(calls) == st.token_readbacks == st.iterations, (
+        len(calls), st.token_readbacks, st.iterations)
+    assert st.max_concurrency > 1          # rounds really were batched
+    # identical tokens to the offline serve() wrapper on the same workload
+    ref = _core(cfg, "paged", kv_capacity_tokens=4096).serve(
+        _mk_requests(spec), {k: v.copy() for k, v in prompts.items()},
+        max_wall_s=900.0)
+    assert outs == [ref["outputs"][i] for i in range(6)]
+
+
+def test_slo_classes_map_to_deadlines(cfg):
+    core = _core(cfg, "paged")
+    server = InferenceServer(core)
+    h = server.submit(np.arange(8, dtype=np.int32) + 1,
+                      slo_class="interactive", max_output=2)
+    cls = SLO_CLASSES["interactive"]
+    assert h.request.ttft_slo == cls.ttft_slo
+    assert h.request.tbt_slo == cls.tbt_slo
+    assert h.request.slo_class == "interactive"
+    with pytest.raises(KeyError):
+        server.submit(np.arange(4, dtype=np.int32) + 1, slo_class="platinum")
+    h.result()
+    assert not core.has_work()
+
+
+def test_serving_engine_alias_preserved():
+    assert ServingEngine is EngineCore
