@@ -96,31 +96,44 @@ def engine_comparison(n_requests: int = 12, seed: int = 0) -> dict:
     """Slot vs paged engine on a reduced config with real forwards, driven
     through the *online* API: an InferenceServer submits every request to
     the step-based EngineCore via the open-loop live-arrival driver (the
-    streaming production path), not the offline ``serve()`` wrapper."""
+    streaming production path), not the offline ``serve()`` wrapper.
+
+    The paged engine honors the shared mesh override (``REPRO_FORCE_MESH``,
+    e.g. the CI forced-host-mesh job): the record then carries the mesh
+    shape + per-shard KV accounting, and greedy behavior must be identical.
+    Requests rotate through the named SLO classes so the per-class
+    violation/goodput breakdown in BENCH_goodput.json is populated."""
     import numpy as np
     from repro.configs import get_config
     from repro.core import SlidingServeScheduler
+    from repro.launch.mesh import make_serving_mesh
     from repro.serving.engine import EngineCore
+    from repro.serving.metrics import summarize_by_class
     from repro.serving.request import Request
-    from repro.serving.server import InferenceServer
+    from repro.serving.server import SLO_CLASSES, InferenceServer
     from repro.serving.workloads import run_open_loop
 
     cfg = get_config("llama3.2-3b").smoke()
     rng = np.random.default_rng(seed)
+    classes = sorted(SLO_CLASSES)
     proto = [Request(rid=i, arrival=0.0,
                      prompt_len=int(rng.integers(16, 96)),
                      max_output=int(rng.integers(3, 6)),
-                     ttft_slo=60.0, tbt_slo=60.0) for i in range(n_requests)]
+                     ttft_slo=60.0, tbt_slo=60.0,
+                     slo_class=classes[i % len(classes)])
+             for i in range(n_requests)]
     prompts = {r.rid: rng.integers(1, cfg.vocab_size, r.prompt_len).astype(np.int32)
                for r in proto}
     results = {}
     for mode in ("slot", "paged"):
         reqs = [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
                         max_output=r.max_output, ttft_slo=r.ttft_slo,
-                        tbt_slo=r.tbt_slo) for r in proto]
+                        tbt_slo=r.tbt_slo, slo_class=r.slo_class)
+                for r in proto]
         sched = SlidingServeScheduler(max_budget=512, max_iter_time=5.0)
+        mesh = make_serving_mesh(None) if mode == "paged" else None
         core = EngineCore(cfg, sched, cache_mode=mode, max_slots=8,
-                          max_len=256, kv_capacity_tokens=4096)
+                          max_len=256, kv_capacity_tokens=4096, mesh=mesh)
         server = InferenceServer(core)
         out = run_open_loop(server, reqs,
                             {k: v.copy() for k, v in prompts.items()},
@@ -132,7 +145,15 @@ def engine_comparison(n_requests: int = 12, seed: int = 0) -> dict:
                          "max_concurrency": st.max_concurrency,
                          "calls_per_round": calls_per_round,
                          "max_round_calls": st.max_round_calls,
-                         "wall": out["wall"]}
+                         "wall": out["wall"],
+                         "finished_by_class": dict(st.finished_by_class),
+                         "evicted_by_class": dict(st.evicted_by_class),
+                         "per_class": summarize_by_class(reqs, out["wall"])}
+        if mode == "paged":
+            results[mode]["sharding"] = core.shard_info()
+            if mesh is not None:
+                emit("engine/paged/mesh", results[mode]["sharding"]["mesh"],
+                     f"kv_partition={results[mode]['sharding']['kv_partition']}")
         emit(f"engine/{mode}/finished", len(out["finished"]), f"of {n_requests}")
         emit(f"engine/{mode}/max_concurrency", st.max_concurrency,
              "slot ceiling is max_slots=8" if mode == "slot" else

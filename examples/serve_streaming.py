@@ -12,12 +12,19 @@ Exercises the step-based online API end to end on a reduced config (CPU):
   per-round readback.
 
     PYTHONPATH=src python examples/serve_streaming.py [--cache-mode paged]
+    REPRO_FORCE_MESH=2x4 ... python examples/serve_streaming.py --cache-mode paged
+
+``--mesh``/``REPRO_FORCE_MESH`` (the shared helper in ``launch/mesh.py``,
+same flag as ``launch/serve.py``) runs the paged executor sharded under
+jit + shard_map; everything the demo asserts — streaming, cancel, stop
+tokens, one readback per round, page-leak freedom — must hold unchanged.
 """
 import argparse
 
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import add_mesh_argument, make_serving_mesh
 from repro.serving.server import InferenceServer
 
 
@@ -27,14 +34,18 @@ def main():
     ap.add_argument("--cache-mode", default="auto",
                     choices=["auto", "slot", "paged"])
     ap.add_argument("--kv-tokens", type=int, default=4096)
+    add_mesh_argument(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     server = InferenceServer.build(cfg, cache_mode=args.cache_mode,
                                    max_slots=4, max_len=512,
-                                   kv_capacity_tokens=args.kv_tokens)
+                                   kv_capacity_tokens=args.kv_tokens,
+                                   mesh=make_serving_mesh(args.mesh))
     core = server.core
     print(f"online API demo on {cfg.name} ({core.cache_mode} KV cache)")
+    if core.mesh is not None:
+        print(core.shard_banner())
 
     rng = np.random.default_rng(0)
     mk = lambda n: rng.integers(1, cfg.vocab_size, n).astype(np.int32)

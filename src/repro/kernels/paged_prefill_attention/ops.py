@@ -1,12 +1,26 @@
-"""Jitted public wrapper for the paged-prefill attention kernel."""
+"""Jitted public wrapper + sharded dispatch for the paged-prefill attention
+kernel.
+
+``paged_prefill_attention_auto`` mirrors the decode op's mesh dispatch (see
+``kernels/paged_attention/ops.py``): single device exactly as before;
+head-sharded ``shard_map`` when the KV head count divides the mesh axis (each
+shard runs the unmodified kernel/oracle on its head slice, grid shrinking
+with the slice); otherwise the sequence-sharded fallback — replicated pages,
+block-table columns sharded, partial softmax combined flash-style with
+``pmax``/``psum`` — using the jnp oracle math on every backend.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels.paged_prefill_attention.kernel import paged_prefill_attention
-from repro.kernels.paged_prefill_attention.ref import paged_prefill_attention_ref
+from repro.kernels.paged_prefill_attention.ref import (
+    NEG_INF, paged_prefill_attention_ref)
+from repro.kernels.shard_utils import axis_size, head_shards, shard_map
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
@@ -20,12 +34,12 @@ def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, row_pos,
                                    interpret=interpret)
 
 
-def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
-                                 lengths, *, scale, window=0, softcap=0.0):
-    """Backend dispatch used inside the model's paged-chunk forward: the
-    Pallas TPU kernel on TPU (streams K/V pages once, no gathered k_all/v_all
-    and no dense [R,H,G,Sq,Sk] score tensor), the pure-jnp oracle elsewhere
-    (CPU CI boxes). Traceable either way — the choice is made at trace time."""
+def _single_device(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+                   scale, window, softcap):
+    """Backend dispatch on one shard/device: the Pallas TPU kernel on TPU
+    (streams K/V pages once, no gathered k_all/v_all and no dense
+    [R,H,G,Sq,Sk] score tensor), the pure-jnp oracle elsewhere (CPU CI
+    boxes). Traceable either way — the choice is made at trace time."""
     if jax.default_backend() == "tpu":
         return paged_prefill_attention(q, k_pages, v_pages, block_tables,
                                        row_pos, lengths, scale=scale,
@@ -33,3 +47,97 @@ def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
     return paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
                                        row_pos, lengths, scale=scale,
                                        window=window, softcap=softcap)
+
+
+def _head_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+                  scale, window, softcap, mesh, axis):
+    """KV heads shard on ``axis``; q [R, Sq, Hkv, G, D] shards its Hkv dim in
+    lockstep with the page pools, so per-head math is untouched and the
+    output only needs one re-replicating all-gather (no arithmetic)."""
+    def one_shard(q_, k_, v_, bt_, rp_, ln_):
+        return _single_device(q_, k_, v_, bt_, rp_, ln_, scale=scale,
+                              window=window, softcap=softcap)
+
+    fn = shard_map(one_shard, mesh=mesh,
+                   in_specs=(P(None, None, axis, None, None),
+                             P(axis, None, None, None),
+                             P(axis, None, None, None),
+                             P(None, None), P(None), P(None)),
+                   out_specs=P(None, None, axis, None, None))
+    out = fn(q, k_pages, v_pages, block_tables, row_pos, lengths)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
+def _seq_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+                 scale, window, softcap, mesh, axis):
+    """Replicated pages, block-table columns sharded: shard i attends its
+    rows' queries over logical pages [i*n/m, (i+1)*n/m) and contributes a
+    partial softmax. Mirrors ``paged_prefill_attention_ref`` term for term —
+    only the cross-shard grouping of the sums differs."""
+    m = axis_size(mesh, axis)
+    R, Sq = q.shape[0], q.shape[1]
+    ps = k_pages.shape[2]
+    n = block_tables.shape[1]
+    if n % m:
+        pad = m - n % m            # page-0 pad columns land past every
+        block_tables = jnp.concatenate(                 # row's valid length
+            [block_tables, jnp.zeros((R, pad), block_tables.dtype)], axis=1)
+        # pin replicated: a GSPMD-chosen partial sharding on the concat
+        # output would be *summed* into the shard_map in_spec (see the
+        # decode op for the observed failure mode).
+        block_tables = jax.lax.with_sharding_constraint(
+            block_tables, NamedSharding(mesh, P()))
+    n_loc = block_tables.shape[1] // m
+
+    def one_shard(q_, kp, vp, bt_, rp, ln):
+        i = jax.lax.axis_index(axis)
+        g = kp[:, bt_]                          # [Hkv, R, n_loc, ps, D]
+        Hkv, _, _, _, D = g.shape
+        k_all = g.transpose(1, 2, 3, 0, 4).reshape(R, n_loc * ps, Hkv, D)
+        v_all = vp[:, bt_].transpose(1, 2, 3, 0, 4).reshape(
+            R, n_loc * ps, Hkv, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_, k_all,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap and softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = i * (n_loc * ps) + jnp.arange(n_loc * ps)   # global positions
+        q_pos = jnp.asarray(rp).reshape(-1, 1) + jnp.arange(Sq)[None, :]
+        mask = k_pos[None, None, :] <= q_pos[:, :, None]    # [R, Sq, k]
+        if window and window > 0:
+            mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
+        mask = mask & (k_pos[None, None, :]
+                       < jnp.asarray(ln).reshape(-1, 1, 1))
+        mask = mask[:, None, None]                          # [R,1,1,Sq,k]
+        s = jnp.where(mask, s, NEG_INF)
+        m_loc = jnp.max(s, axis=-1, keepdims=True)
+        m_glob = jax.lax.pmax(m_loc, axis)      # exact: max is associative
+        e = jnp.exp(s - m_glob)
+        den = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), axis)
+        p = (e / den).astype(v_all.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
+        return jax.lax.psum(out, axis)
+
+    fn = shard_map(one_shard, mesh=mesh,
+                   in_specs=(P(), P(), P(), P(None, axis), P(), P()),
+                   out_specs=P())
+    return fn(q, k_pages, v_pages, block_tables, row_pos, lengths)
+
+
+def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
+                                 lengths, *, scale, window=0, softcap=0.0,
+                                 mesh=None, axis="model"):
+    """Mesh-aware dispatch used inside the model's paged-chunk forward (see
+    module docstring). ``mesh=None`` (or a 1-wide ``axis``) is the exact
+    pre-mesh single-device path."""
+    m = axis_size(mesh, axis)
+    if m <= 1:
+        return _single_device(q, k_pages, v_pages, block_tables, row_pos,
+                              lengths, scale=scale, window=window,
+                              softcap=softcap)
+    if head_shards(k_pages.shape[0], mesh, axis) > 1:
+        return _head_sharded(q, k_pages, v_pages, block_tables, row_pos,
+                             lengths, scale=scale, window=window,
+                             softcap=softcap, mesh=mesh, axis=axis)
+    return _seq_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths,
+                        scale=scale, window=window, softcap=softcap,
+                        mesh=mesh, axis=axis)

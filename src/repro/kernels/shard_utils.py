@@ -1,0 +1,41 @@
+"""shard_map compatibility shim + mesh helpers for sharded kernel dispatch.
+
+The serving executor runs the fused paged steps under ``jax.jit`` on a mesh;
+inside those steps the attention ops are the only mesh-aware computation
+(everything else is replicated math on replicated operands). The ops modules
+use :func:`shard_map` from here so one jax-version shim covers MoE expert
+parallelism and the paged-attention shards alike.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.5 exports shard_map at top level (``check_vma`` kwarg)
+    from jax import shard_map as _shard_map_impl
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # older jax (0.4.x): experimental module, ``check_rep`` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    kw = {_SHARD_MAP_CHECK_KW: check_vma}
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+def axis_size(mesh, axis: str) -> int:
+    """Size of ``axis`` on ``mesh``; 1 when there is no mesh (single-device
+    dispatch) or the mesh does not carry the axis."""
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[axis])
+
+
+def head_shards(num_kv_heads: int, mesh, axis: str) -> int:
+    """The ONE partition rule for paged KV: how many ways the KV heads (and
+    with them the page pools) split on ``axis`` — the axis size when it
+    divides the head count, else 1 (replicated pools + sequence-sharded
+    attention fallback). Both ops dispatchers, ``paged_cache_specs`` and
+    ``EngineCore.kv_shards`` consult this so cache placement, kernel
+    dispatch and reporting can never disagree."""
+    m = axis_size(mesh, axis)
+    return m if m > 1 and num_kv_heads % m == 0 else 1

@@ -1,12 +1,39 @@
 """Production mesh construction.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before any jax
 device query, and tests/benches must keep seeing 1 device.
+
+Two mesh families live here:
+
+* :func:`make_production_mesh` — the training/dry-run launch mesh (pod x
+  data x model).
+* :func:`make_serving_mesh` — the sharded serving executor's mesh. Every
+  serving entrypoint (``launch/serve.py``, ``examples/serve_streaming.py``,
+  ``benchmarks/bench_goodput.py``) resolves it through the same
+  ``--mesh``-flag / ``REPRO_FORCE_MESH``-env helper instead of
+  re-implementing the parsing.
 """
 from __future__ import annotations
 
+import os
+from typing import Optional, Tuple
+
 import jax
+
+_AXIS_NAMES = ("pod", "data", "model")
+
+
+def parse_mesh_spec(spec: str) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """``"2x4"`` -> ((2, 4), ("data", "model")); 1-3 ``x``-separated dims,
+    named right-aligned against (pod, data, model)."""
+    try:
+        dims = tuple(int(x) for x in spec.split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r} (want e.g. '2x4')")
+    if not 1 <= len(dims) <= 3 or any(d < 1 for d in dims):
+        raise ValueError(f"bad mesh spec {spec!r} (want 1-3 positive dims)")
+    return dims, _AXIS_NAMES[-len(dims):]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,15 +46,45 @@ def make_production_mesh(*, multi_pod: bool = False):
     ``REPRO_FORCE_MESH`` (e.g. "4x8" / "2x2x8") overrides the shape — used by
     tests to exercise the full launch stack on few host devices.
     """
-    import os
     forced = os.environ.get("REPRO_FORCE_MESH")
     if forced:
-        dims = tuple(int(x) for x in forced.split("x"))
-        axes = ("pod", "data", "model")[-len(dims):]
+        dims, axes = parse_mesh_spec(forced)
         return jax.make_mesh(dims, axes)
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def serving_mesh_spec(cli_value: Optional[str] = None) -> Optional[str]:
+    """Uniform mesh-override resolution shared by every serving entrypoint:
+    an explicit ``--mesh`` value wins, else ``REPRO_FORCE_MESH``, else None
+    (single-device engine)."""
+    return cli_value or os.environ.get("REPRO_FORCE_MESH") or None
+
+
+def make_serving_mesh(spec: Optional[str] = None):
+    """Mesh for the sharded paged serving executor, or ``None`` for the
+    single-device engine (the default — and the bit-identity baseline).
+
+    ``spec`` like ``"2x4"`` (data x model): ``model`` is the KV/attention
+    shard axis, any ``data``/``pod`` axes are replicated (the engine's host
+    state — block tables, token ids — is replicated anyway, so extra axes
+    only prove mesh-shape flexibility on fake host devices). A spec of total
+    size 1 still builds a real mesh: it exercises the whole sharded code
+    path on one device, bit-identical by construction.
+    """
+    spec = serving_mesh_spec(spec)
+    if not spec:
+        return None
+    dims, axes = parse_mesh_spec(spec)
+    return jax.make_mesh(dims, axes)
+
+
+def add_mesh_argument(ap) -> None:
+    """Attach the shared ``--mesh`` flag (serving entrypoints)."""
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh shape, e.g. 2x4 (data x model); "
+                         "defaults to $REPRO_FORCE_MESH, else single-device")
 
 
 def dp_axes(mesh) -> tuple:

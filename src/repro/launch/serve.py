@@ -8,6 +8,13 @@ back through per-request handles.
 
     python -m repro.launch.serve --arch llama3.2-3b --requests 8
     python -m repro.launch.serve --no-smoke --slo-class interactive ...
+    REPRO_FORCE_MESH=2x4 python -m repro.launch.serve --cache-mode paged
+    python -m repro.launch.serve --mesh 2x4 ...   # same thing, explicit
+
+``--mesh``/``REPRO_FORCE_MESH`` (the shared helper in ``launch/mesh.py``)
+runs the paged executor under jit + shard_map: KV page pools shard attention
+heads on the ``model`` axis (or fall back to sequence-sharded attention),
+while the scheduler stack and all host state stay mesh-oblivious.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import SlidingServeScheduler
+from repro.launch.mesh import add_mesh_argument, make_serving_mesh
 from repro.serving.engine import EngineCore
 from repro.serving.request import Request
 from repro.serving.server import SLO_CLASSES, InferenceServer
@@ -46,17 +54,21 @@ def main(argv=None):
     ap.add_argument("--kv-tokens", type=int, default=4096,
                     help="paged KV capacity in tokens")
     ap.add_argument("--page-size", type=int, default=16)
+    add_mesh_argument(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    mesh = make_serving_mesh(args.mesh)
     sched = SlidingServeScheduler(max_budget=args.max_budget, max_iter_time=2.0)
     core = EngineCore(cfg, sched, cache_mode=args.cache_mode,
                       max_slots=4, max_len=512,
                       kv_capacity_tokens=args.kv_tokens,
-                      page_size=args.page_size)
+                      page_size=args.page_size, mesh=mesh)
     server = InferenceServer(core)
+    if core.mesh is not None:
+        print(core.shard_banner())
     slo = SLO_CLASSES[args.slo_class]
     rng = np.random.default_rng(0)
     inter = rng.exponential(1.0 / args.qps, args.requests)

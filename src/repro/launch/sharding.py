@@ -185,6 +185,33 @@ def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def paged_cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
+                      axis: str = "model") -> Any:
+    """PartitionSpecs for the *serving* paged KV pools (``init_paged_cache``
+    leaves, ``[reps, Hkv, num_pages, page_size, Dh]``).
+
+    Mirrors :func:`cache_specs`' head rule: pages shard their KV-head dim on
+    ``axis`` when the head count divides it; otherwise the pools stay
+    replicated and the attention ops sequence-shard the computation instead
+    (partial-softmax combine — see ``kernels/paged_attention/ops.py``).
+    Block tables, write slots and token-id outputs are replicated host-side
+    state either way. A mesh without ``axis`` (e.g. DP-only) replicates the
+    pools, matching the ops dispatch's size-1 fallback. The shared
+    ``head_shards`` rule keeps placement, ops dispatch and reporting in
+    lockstep."""
+    from repro.kernels.shard_utils import head_shards
+    heads_fit = head_shards(cfg.num_kv_heads, mesh, axis) > 1
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if heads_fit and nd >= 2:
+            return _validated(P(None, axis, *([None] * (nd - 2))),
+                              leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
 def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
     dp = dp_axes(mesh)
     dpa = dp if len(dp) > 1 else dp[0]

@@ -50,6 +50,11 @@ class RunCtx:
     # roofline accounting: XLA's cost analysis counts a while-loop body once,
     # so the dry-run's roofline pass lowers with layer scans unrolled.
     unroll_layers: bool = False
+    # sharded serving: when set, the paged attention ops run under shard_map
+    # on this mesh (KV heads on ``shard_axis`` when they divide it, else the
+    # sequence-sharded fallback). None = exact single-device dispatch.
+    mesh: Any = None
+    shard_axis: str = "model"
 
 
 # =============================================================================
@@ -367,7 +372,8 @@ def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window,
         o = paged_prefill_attention_auto(
             q, kp, vp, paged.block_tables, jnp.asarray(pos),
             jnp.asarray(lengths), scale=scale, window=window,
-            softcap=cfg.attn_logit_softcap)
+            softcap=cfg.attn_logit_softcap, mesh=rctx.mesh,
+            axis=rctx.shard_axis)
     elif mode == "paged_decode":
         from repro.kernels.paged_attention.ops import paged_attention_auto
         kp = A.write_pages(state["k_pages"], k, paged.write_slots)
@@ -377,7 +383,8 @@ def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window,
         o = paged_attention_auto(q[:, 0].reshape(B, H, Dh), kp, vp,
                                  paged.block_tables, jnp.asarray(lengths),
                                  scale=scale, window=window,
-                                 softcap=cfg.attn_logit_softcap)
+                                 softcap=cfg.attn_logit_softcap,
+                                 mesh=rctx.mesh, axis=rctx.shard_axis)
         o = o.reshape(B, q.shape[2], q.shape[3], Dh)[:, None]
     elif mode == "decode":
         if jnp.ndim(lengths):

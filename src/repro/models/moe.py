@@ -26,18 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # jax >= 0.5 exports shard_map at top level (``check_vma`` kwarg)
-    from jax import shard_map as _shard_map_impl
-    _SHARD_MAP_CHECK_KW = "check_vma"
-except ImportError:  # older jax (0.4.x): experimental module, ``check_rep`` kwarg
-    from jax.experimental.shard_map import shard_map as _shard_map_impl
-    _SHARD_MAP_CHECK_KW = "check_rep"
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
-    kw = {_SHARD_MAP_CHECK_KW: check_vma}
-    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, **kw)
+from repro.kernels.shard_utils import shard_map
 
 from repro.models.layers import act_fn, dense_init, split
 

@@ -38,6 +38,7 @@ class BlockAllocator:
         self._free_ids: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.owners: Dict[int, _Owner] = {}
         self.evictions = 0            # lifetime eviction count (KV pressure)
+        self.peak_used_blocks = 0     # high-water mark (per-shard accounting)
 
     # ---- queries --------------------------------------------------------------
     def blocks_for(self, tokens: int) -> int:
@@ -63,6 +64,30 @@ class BlockAllocator:
         """Physical page ids backing ``rid`` in logical order."""
         return list(self.owners[rid].page_ids)
 
+    def shard_stats(self, num_shards: int = 1) -> Dict:
+        """Per-shard page-pool accounting for the sharded serving executor.
+
+        A head-sharded pool stores every page id on every shard but only
+        ``1/num_shards`` of each page's bytes (KV heads are the sharded dim),
+        so page *counts* replicate across shards while byte capacity divides;
+        ``num_shards=1`` also covers the replicated sequence-sharded
+        fallback. The peak high-water mark feeds the per-shard allocator
+        imbalance follow-on (ROADMAP)."""
+        used = self.num_blocks - self.free_blocks
+        return {
+            "kv_pool_shards": num_shards,
+            "pages_total": self.num_blocks,
+            "pages_used": used,
+            "pages_free": self.free_blocks,
+            "peak_pages_used": self.peak_used_blocks,
+            "utilization": self.utilization(),
+            "tokens_capacity_per_shard": self.num_blocks * self.block_size,
+        }
+
+    def _note_usage(self) -> None:
+        self.peak_used_blocks = max(self.peak_used_blocks,
+                                    self.num_blocks - self.free_blocks)
+
     # ---- lifecycle --------------------------------------------------------------
     def admit(self, rid: int, initial_tokens: int = 0) -> bool:
         assert rid not in self.owners, f"double admit {rid}"
@@ -72,6 +97,7 @@ class BlockAllocator:
         ids = [self._free_ids.pop() for _ in range(need)]
         self.owners[rid] = _Owner(rid, need, initial_tokens, ids)
         self.free_blocks -= need
+        self._note_usage()
         return True
 
     def grow(self, rid: int, new_tokens: int) -> bool:
@@ -86,6 +112,7 @@ class BlockAllocator:
         o.blocks += need
         o.tokens = new_tokens
         self.free_blocks -= need
+        self._note_usage()
         return True
 
     def free(self, rid: int) -> None:
@@ -96,12 +123,18 @@ class BlockAllocator:
 
     # ---- preemption policy ------------------------------------------------------
     def pick_victim(self, needy_rid: int,
-                    priority: Callable[[int], float]) -> Optional[int]:
+                    priority: Callable[[int], float],
+                    eligible: Optional[Callable[[int], bool]] = None
+                    ) -> Optional[int]:
         """Lowest-priority owner (largest ``priority(rid)`` key) other than
         the needy request — the shared evict-and-recompute policy. Callers
         pass e.g. ``priority=arrival_of`` so the newest request is relegated
-        first (vLLM recompute order)."""
-        cands = [rid for rid in self.owners if rid != needy_rid]
+        first (vLLM recompute order). ``eligible`` filters the candidate set
+        (the engine's SLO-class guard: a victim of a more latency-critical
+        class than the needy request is never relegated — e.g. ``batch``
+        growth cannot evict ``interactive``)."""
+        cands = [rid for rid in self.owners
+                 if rid != needy_rid and (eligible is None or eligible(rid))]
         if not cands:
             return None
         return max(cands, key=priority)

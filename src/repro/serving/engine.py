@@ -32,6 +32,17 @@ substrate. Two cache designs share one serve loop:
   is not paged) — contiguous ``max_slots x max_len`` rows, per-request
   chunked prefill and lockstep ragged decode, as in the original engine.
 
+  The paged executor is **mesh-aware**: pass ``mesh=`` (see
+  ``launch/mesh.make_serving_mesh``) and the fused steps run under
+  ``jax.jit`` + ``shard_map``. KV page pools shard attention heads on the
+  ``model`` axis when the head count divides it, else stay replicated with
+  sequence-sharded attention (``launch/sharding.paged_cache_specs`` mirrors
+  the training cache rule); params and every host-derived operand — block
+  tables, write slots, token ids — replicate, so the scheduler stack needs
+  zero changes and greedy tokens are bit-identical to the single-device
+  engine. The one-readback-per-round and ROW_BUCKETS invariants survive
+  unchanged (token ids come back as one replicated [R] vector).
+
 Wall-clock latencies feed the online predictor in both modes (paged observes
 one round late, at the readback that proves the round finished). On CPU the
 engine serves the reduced-config models (the examples use it); on TPU the
@@ -62,6 +73,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MAMBA, MLSTM, SLSTM, ModelConfig
 from repro.core.scheduler import KVPressure, SchedulerBase
@@ -146,6 +158,10 @@ class EngineStats:
     host_s: float = 0.0           # wall with NO round in flight: unhidden
                                   # host work + idle (the overlap target -> 0)
     reused_uploads: int = 0       # block-table uploads served from device cache
+    # ---- per-SLO-class breakdown (admission/eviction weight the class) ------
+    finished_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    evicted_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    aborted_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -176,6 +192,9 @@ class EngineCore:
     ``overlap``: paged mode only — run the one-step-lookahead pipeline
     (default). ``False`` syncs every round immediately with per-row token
     transfers, reproducing the pre-zero-sync hot path for profiling.
+    ``mesh``: paged mode only — run the fused steps sharded (see the module
+    docstring); ``None`` is the exact single-device engine. Slot mode
+    ignores it (recurrent/MLA archs stay single-device).
     """
 
     def __init__(self, cfg: ModelConfig, scheduler: SchedulerBase, *,
@@ -183,7 +202,7 @@ class EngineCore:
                  max_slots: int = 8, max_len: int = 512,
                  kv_capacity_tokens: Optional[int] = None,
                  page_size: int = 16, decode_reserve_tokens: int = 64,
-                 overlap: bool = True,
+                 overlap: bool = True, mesh=None,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
         if cache_mode == "auto":
             cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
@@ -198,6 +217,11 @@ class EngineCore:
         self.max_len = max_len
         self.overlap = overlap
         self.rctx = rctx or RunCtx(block_q=32, block_k=32, mlstm_block=32)
+        # the mesh applies to the paged executor only; slot mode (recurrent /
+        # MLA archs) stays single-device and quietly ignores an env override.
+        self.mesh = mesh if cache_mode == "paged" else None
+        self._repl: Optional[NamedSharding] = None
+        self._cache_shardings = None
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self.stats = EngineStats()
         self._tokens_out: Dict[int, List[int]] = {}
@@ -234,6 +258,13 @@ class EngineCore:
             self._length: Dict[int, int] = {}     # tokens resident per rid
             self._folded: Dict[int, int] = {}     # gen tokens folded on evict
             self._dev_cache: Dict[Tuple, Tuple[np.ndarray, jnp.ndarray]] = {}
+            jit_kw = {}
+            if self.mesh is not None:
+                self._init_mesh_state(cfg)
+                # pin the outputs: token ids replicated (the one host-visible
+                # artifact per round), cache exactly on the input shardings so
+                # donation stays a same-layout buffer reuse.
+                jit_kw["out_shardings"] = (self._repl, self._cache_shardings)
             rctx_ = self.rctx
 
             def chunk_fused(params, tokens, cache, row_pos, row_lens, bt, ws,
@@ -248,10 +279,89 @@ class EngineCore:
                                          rctx=rctx_, lengths=lengths,
                                          block_tables=bt, write_slots=ws)
 
-            self._jit_chunk_fused = jax.jit(chunk_fused, donate_argnums=(2,))
-            self._jit_decode_fused = jax.jit(decode_fused, donate_argnums=(2,))
+            self._jit_chunk_fused = jax.jit(chunk_fused, donate_argnums=(2,),
+                                            **jit_kw)
+            self._jit_decode_fused = jax.jit(decode_fused, donate_argnums=(2,),
+                                             **jit_kw)
         else:
             self._init_slot_mode(cfg, max_slots, max_len)
+
+    # =========================================================================
+    # sharded paged executor (jit + shard_map on a mesh)
+    # =========================================================================
+    def _init_mesh_state(self, cfg: ModelConfig) -> None:
+        """Place the paged model state on the mesh: params and host-derived
+        operands replicate (dense math is identical on every device — the
+        bit-identity guarantee), while the KV page pools shard attention
+        heads on the ``model`` axis when the head count divides it
+        (``launch/sharding.py``'s cache rule; otherwise the pools stay
+        replicated and the attention ops sequence-shard the computation).
+        The scheduler stack never sees any of this — block tables and token
+        ids stay replicated host-side state."""
+        from repro.launch.sharding import paged_cache_specs
+        mesh = self.mesh
+        axis = self.rctx.shard_axis
+        self.rctx = dataclasses.replace(self.rctx, mesh=mesh)
+        self._repl = NamedSharding(mesh, P())
+        self.params = jax.device_put(self.params, self._repl)
+        shapes = jax.eval_shape(lambda c: c, self.cache)
+        specs = paged_cache_specs(cfg, shapes, mesh, axis=axis)
+        self._cache_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.cache = jax.tree.map(jax.device_put, self.cache,
+                                  self._cache_shardings)
+
+    def _to_dev(self, arr) -> jnp.ndarray:
+        """Host->device upload; replicated across the mesh when sharded (the
+        engine's host state — tokens, tables, slots — is mesh-invariant)."""
+        if self._repl is not None:
+            return jax.device_put(arr, self._repl)
+        return jnp.asarray(arr)
+
+    def kv_shards(self) -> int:
+        """How many ways the KV page pools are partitioned (1 = replicated
+        or single-device); the shared ``head_shards`` rule, so this always
+        agrees with cache placement and ops dispatch."""
+        from repro.kernels.shard_utils import head_shards
+        if self.cache_mode != "paged" or self.mesh is None:
+            return 1
+        return head_shards(self.cfg.num_kv_heads, self.mesh,
+                           self.rctx.shard_axis)
+
+    def shard_info(self) -> Dict:
+        """Mesh + per-shard KV-pool accounting (BENCH_goodput.json record)."""
+        if self.cache_mode != "paged":
+            return {"mesh": None, "kv_partition": "none", "kv_shards": 1}
+        mesh = self.mesh
+        shards = self.kv_shards()
+        m = 1 if mesh is None else int(mesh.shape.get(self.rctx.shard_axis, 1))
+        # a 1-wide (or absent) shard axis runs the exact single-device
+        # dispatch — report it as unpartitioned, not as a trivial head shard.
+        if shards > 1:
+            partition = "heads"
+        elif m > 1:
+            partition = "sequence"
+        else:
+            partition = "none"
+        info = {
+            "mesh": None if mesh is None else "x".join(
+                str(mesh.shape[a]) for a in mesh.axis_names),
+            "axes": None if mesh is None else dict(mesh.shape),
+            "kv_partition": partition,
+            "kv_shards": shards,
+            "kv_heads_per_shard": self.cfg.num_kv_heads // shards,
+        }
+        info.update(self.alloc.shard_stats(shards))
+        return info
+
+    def shard_banner(self) -> str:
+        """One-line human-readable form of :meth:`shard_info` (the serving
+        entrypoints print it instead of each formatting their own)."""
+        info = self.shard_info()
+        return (f"sharded paged executor: mesh={info['mesh']} "
+                f"kv_partition={info['kv_partition']} "
+                f"shards={info['kv_shards']}")
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
@@ -264,6 +374,10 @@ class EngineCore:
     # =========================================================================
     # step API: add_request / abort / step / has_work
     # =========================================================================
+    @staticmethod
+    def _bump(d: Dict[str, int], cls: str) -> None:
+        d[cls] = d.get(cls, 0) + 1
+
     def _event(self, kind: EventKind, rid: int, t: float,
                token: Optional[int] = None, reason: str = "") -> None:
         self._events.append(EngineEvent(kind, rid, t, token, reason))
@@ -324,6 +438,7 @@ class EngineCore:
         self._retire(r)
         self._aborted.append(r)
         self.stats.aborted += 1
+        self._bump(self.stats.aborted_by_class, r.slo_class)
         self._event(EventKind.ABORTED, rid, self._now())
         return self._drain_events()
 
@@ -396,8 +511,12 @@ class EngineCore:
         self._prompts.pop(r.rid, None)
 
     def _admit(self) -> None:
-        """Move due arrivals into the admission queue, then admit FIFO while
-        the free pool lasts (full-prompt + decode-reserve reservation)."""
+        """Move due arrivals into the admission queue, then admit while the
+        free pool lasts (full-prompt + decode-reserve reservation). Admission
+        order weights the request's named SLO class: latency-critical classes
+        (``interactive``) go first, FIFO preserved within a class — a
+        single-class workload therefore admits in exactly the legacy FIFO
+        order (the stable sort is a no-op)."""
         paged = self.cache_mode == "paged"
         while self._pending and self._pending[0][0] <= self._now():
             _, _, r = heapq.heappop(self._pending)
@@ -409,6 +528,9 @@ class EngineCore:
         exhausted = (self.alloc.free_blocks == 0 if paged
                      else not self.free_slots)
         if self._queued and not exhausted:
+            if len(self._queued) > 1:
+                self._queued = collections.deque(
+                    sorted(self._queued, key=lambda r: r.class_rank()))
             failures = 0
             for _ in range(len(self._queued)):
                 r = self._queued.popleft()
@@ -526,6 +648,7 @@ class EngineCore:
             if r.state == ReqState.FINISHED:
                 self._retire(r)
                 self._done.append(r)
+                self._bump(self.stats.finished_by_class, r.slo_class)
         if paged:
             # readback + observe happen at the next round's flush; the
             # executed batch is recorded on the in-flight round so the
@@ -695,6 +818,7 @@ class EngineCore:
         prompts = self._prompts
         self.alloc.evict(victim.rid)
         self.stats.evictions += 1
+        self._bump(self.stats.evicted_by_class, victim.slo_class)
         self._event(EventKind.EVICTED, victim.rid, self._now())
         gen = self._tokens_out.get(victim.rid, [])
         if victim.generated > 0:
@@ -722,16 +846,27 @@ class EngineCore:
 
     def _grow_or_evict(self, req: Request, new_tokens: int,
                        protected: set) -> bool:
-        """Grow ``req``'s allocation, evicting lowest-priority owners (newest
-        arrival first, preferring requests outside the current decision) until
-        it fits. Returns False if capacity is exhausted even after evicting
-        every other owner."""
+        """Grow ``req``'s allocation, evicting lowest-priority owners until
+        it fits: prefer requests outside the current decision, then the least
+        latency-critical SLO class, then the newest arrival. A victim of a
+        *more* critical class than the needy request is never eligible —
+        ``batch`` growth can never evict ``interactive`` (the starved request
+        simply retries next round, after the critical owners finish).
+        Returns False if capacity is exhausted even after evicting every
+        eligible owner."""
         by_rid = {r.rid: r for r in self._active}
+        needy_rank = req.class_rank()
+
+        def rank_of(rid: int) -> int:
+            r = by_rid.get(rid)
+            return r.class_rank() if r is not None else needy_rank
+
         while not self.alloc.grow(req.rid, new_tokens):
             vid = self.alloc.pick_victim(
                 req.rid,
-                priority=lambda rid: (rid not in protected,
-                                      by_rid[rid].arrival if rid in by_rid else 0.0))
+                priority=lambda rid: (rid not in protected, rank_of(rid),
+                                      by_rid[rid].arrival if rid in by_rid else 0.0),
+                eligible=lambda rid: rank_of(rid) >= needy_rank)
             if vid is None or vid not in by_rid:
                 return False
             self._evict(by_rid.pop(vid))
@@ -792,6 +927,7 @@ class EngineCore:
                 r.finish_time = t_done
                 self._retire(r)
                 self._done.append(r)
+                self._bump(self.stats.finished_by_class, r.slo_class)
                 self._event(EventKind.FINISHED, rid, t_done, reason="stop")
         latency = time.perf_counter() - fr.t_dispatch
         # dispatch->flush intervals are disjoint (the next dispatch happens
@@ -813,7 +949,7 @@ class EngineCore:
         if prev is not None and np.array_equal(prev[0], arr):
             self.stats.reused_uploads += 1
             return prev[1]
-        dev = jnp.asarray(arr)
+        dev = self._to_dev(arr)
         self._dev_cache[key] = (arr, dev)
         return dev
 
@@ -914,21 +1050,21 @@ class EngineCore:
         if asm["kind"] == "decode":
             self._note_shape(("decode", asm["Rb"], asm["nb"]))
             toks, self.cache = self._jit_decode_fused(
-                self.params, jnp.asarray(asm["tokens"]), self.cache,
-                jnp.asarray(asm["lengths"]),
+                self.params, self._to_dev(asm["tokens"]), self.cache,
+                self._to_dev(asm["lengths"]),
                 self._upload_cached(("decode", asm.get("group", 0)),
                                     asm["tables"]),
-                jnp.asarray(asm["slots"].astype(np.int32)))
+                self._to_dev(asm["slots"].astype(np.int32)))
             self.stats.decode_calls += 1
         else:
             self._note_shape(("chunk", asm["Rb"], asm["Lb"], asm["nb"]))
             toks, self.cache = self._jit_chunk_fused(
-                self.params, jnp.asarray(asm["tokens"]), self.cache,
-                jnp.asarray(asm["row_pos"]), jnp.asarray(asm["row_lens"]),
+                self.params, self._to_dev(asm["tokens"]), self.cache,
+                self._to_dev(asm["row_pos"]), self._to_dev(asm["row_lens"]),
                 self._upload_cached(("chunk", asm.get("group", 0)),
                                     asm["tables"]),
-                jnp.asarray(asm["slots"].reshape(-1).astype(np.int32)),
-                jnp.asarray(asm["logits_at"]))
+                self._to_dev(asm["slots"].reshape(-1).astype(np.int32)),
+                self._to_dev(asm["logits_at"]))
             self.stats.prefill_calls += 1
         self._round_calls += 1
         return toks

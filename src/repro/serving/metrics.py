@@ -46,6 +46,18 @@ def summarize(requests: Sequence[Request], duration: float) -> Dict:
     }
 
 
+def summarize_by_class(requests: Sequence[Request], duration: float) -> Dict:
+    """Per-SLO-class violation / goodput breakdown: :func:`summarize` on each
+    named class's subset. The aggregate number hides *which tenant class*
+    pays the violations — with class-weighted admission/eviction in one
+    engine, the per-class split is the signal (``interactive`` should hold
+    its SLO while ``batch`` absorbs the pressure)."""
+    return {
+        cls: summarize([r for r in requests if r.slo_class == cls], duration)
+        for cls in sorted({r.slo_class for r in requests})
+    }
+
+
 def cumulative_violations(requests: Sequence[Request], horizon: float,
                           step: float = 10.0) -> List:
     """Violation count over time (paper Fig. 6): a request counts at the

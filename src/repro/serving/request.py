@@ -24,6 +24,26 @@ class ReqState(enum.Enum):
     ABORTED = "aborted"          # cancelled by the client (EngineCore.abort)
 
 
+# Admission/eviction rank of the named SLO classes (lower = more
+# latency-critical). The engine admits lower ranks first (FIFO preserved
+# within a class) and never evicts a lower-rank owner to grow a higher-rank
+# request — concretely: never evict ``interactive`` to grow ``batch``.
+# Unknown/legacy class names rank with ``standard`` so single-class
+# workloads behave exactly as before.
+SLO_CLASS_RANK = {
+    "interactive": 0,
+    "dialogue": 1,        # the paper's dataset-derived classes
+    "standard": 1,
+    "summarization": 2,
+    "batch": 2,
+}
+DEFAULT_CLASS_RANK = 1
+
+
+def class_rank(name: str) -> int:
+    return SLO_CLASS_RANK.get(name, DEFAULT_CLASS_RANK)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -94,6 +114,11 @@ class Request:
 
     def is_decoding(self) -> bool:
         return self.state == ReqState.DECODING
+
+    def class_rank(self) -> int:
+        """Admission/eviction rank of this request's SLO class (lower = more
+        latency-critical; see :data:`SLO_CLASS_RANK`)."""
+        return class_rank(self.slo_class)
 
     def hits_stop(self, token: int) -> bool:
         """True when ``token`` terminates generation (EOS / stop set)."""

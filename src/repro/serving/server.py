@@ -267,6 +267,7 @@ class InferenceServer:
 
     # ---- reporting -----------------------------------------------------------
     def summary(self) -> Dict:
+        from repro.serving.metrics import summarize_by_class
         reqs = [h.request for h in self.handles.values()]
         fin = [r for r in reqs if r.state == ReqState.FINISHED]
         return {
@@ -274,5 +275,6 @@ class InferenceServer:
             "finished": len(fin),
             "aborted": sum(1 for r in reqs if r.state == ReqState.ABORTED),
             "violations": sum(r.violations()["violated"] for r in fin),
+            "per_class": summarize_by_class(reqs, max(self.core.now(), 1e-9)),
             "stats": self.core.stats,
         }

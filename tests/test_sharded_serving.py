@@ -1,0 +1,247 @@
+"""Sharded paged serving: mesh parity, one-readback-per-round under
+shard_map, and the SLO-class-aware admission/eviction satellites.
+
+The multi-device cases run in a subprocess (forcing 8 host devices needs
+XLA_FLAGS set before jax initializes; the tier-1 suite itself runs on one
+device). Both partition strategies are exercised: the sequence-sharded
+fallback (smoke llama's 2 KV heads don't divide a 4/8-wide ``model`` axis)
+and the head-sharded path (a config with 8 KV heads). Greedy tokens must be
+bit-identical to the single-device engine on 2x4 and 1x8 meshes, and the
+zero-sync invariant — exactly one device→host readback per scheduler round —
+must survive shard_map.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PARITY_SCRIPT = r'''
+import dataclasses
+import numpy as np
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+from repro.configs import get_config
+from repro.core import SlidingServeScheduler
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.engine import EngineCore
+from repro.serving.server import InferenceServer
+
+def run(mesh_spec, cfg):
+    mesh = make_serving_mesh(mesh_spec)
+    # the small decode reserve makes the tiny prompt's block table narrower
+    # than the mesh axis (nb < m), forcing the sequence-sharded fallback's
+    # pad path through the engine.
+    core = EngineCore(cfg, SlidingServeScheduler(max_budget=256,
+                                                 max_iter_time=5.0),
+                      cache_mode="paged", kv_capacity_tokens=2048,
+                      decode_reserve_tokens=8, mesh=mesh)
+    server = InferenceServer(core)
+    rng = np.random.default_rng(0)
+    hs = []
+    for n, cls_ in [(37, "interactive"), (64, "batch"), (18, "standard"),
+                    (5, "interactive")]:
+        hs.append(server.submit(
+            rng.integers(1, core.cfg.vocab_size, n).astype(np.int32),
+            slo_class=cls_, max_output=5))
+    server.run(max_wall_s=200.0)
+    st = core.stats
+    # the zero-sync invariant survives jit(shard_map): one readback per round
+    assert st.token_readbacks == st.iterations, (st.token_readbacks,
+                                                 st.iterations)
+    assert core.alloc.free_blocks == core.alloc.num_blocks, "KV pages leaked"
+    return {h.rid: list(h.collected) for h in hs}, core
+
+cfg = get_config("llama3.2-3b").smoke()          # Hkv=2: sequence fallback
+# Exact token equality is guaranteed by construction for the head-sharded
+# path (per-head math untouched). For the sequence-sharded fallback the
+# partial-softmax combine regroups float sums, so exactness here is an
+# empirical property of the pinned toolchain — it is the PR's acceptance
+# criterion, and greedy argmax over the smoke vocab has ulp-scale margin.
+base, _ = run(None, cfg)
+assert all(len(t) == 5 for t in base.values()), base
+for spec in ("2x4", "1x8"):
+    got, core = run(spec, cfg)
+    info = core.shard_info()
+    assert info["kv_partition"] == "sequence", info
+    assert got == base, (spec, got, base)
+
+cfg8 = dataclasses.replace(cfg, num_heads=8, num_kv_heads=8)  # head-sharded
+base8, _ = run(None, cfg8)
+for spec in ("2x4", "1x8"):
+    got, core = run(spec, cfg8)
+    info = core.shard_info()
+    assert info["kv_partition"] == "heads", info
+    assert info["kv_shards"] == int(spec.split("x")[1]), info
+    assert got == base8, (spec, got, base8)
+
+# ---- ops-level parity vs the jnp oracles, under jit --------------------------
+# covers what engine workloads may not reach: active sliding windows, logit
+# softcap, and block tables narrower than the mesh axis (the pad path — this
+# exact case once summed page ids across the unmentioned mesh axis).
+import jax.numpy as jnp
+from repro.kernels.paged_attention.ops import paged_attention_auto
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_prefill_attention.ops import paged_prefill_attention_auto
+from repro.kernels.paged_prefill_attention.ref import paged_prefill_attention_ref
+
+rng = np.random.default_rng(1)
+B, Hkv, G, D, Pg, ps = 3, 2, 2, 16, 32, 8
+for n in (2, 6, 8):                          # 2 and 6 force the pad path
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(Hkv, Pg, ps, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(Hkv, Pg, ps, D)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, Pg, size=(B, n)), jnp.int32)
+    ln = jnp.asarray([1, min(11, n * ps), n * ps - 3], jnp.int32)
+    qp = jnp.asarray(rng.normal(size=(B, 4, Hkv, G, D)), jnp.float32)
+    rp = jnp.maximum(ln - 4, 0)
+    for window, cap in ((0, 0.0), (7, 0.0), (0, 30.0), (7, 30.0)):
+        ref = paged_attention_ref(q, kp, vp, bt, ln, scale=0.25,
+                                  window=window, softcap=cap)
+        refp = paged_prefill_attention_ref(qp, kp, vp, bt, rp, ln, scale=0.25,
+                                           window=window, softcap=cap)
+        for spec in ("2x4", "1x8"):
+            mesh = make_serving_mesh(spec)
+            got = jax.jit(lambda *a: paged_attention_auto(
+                *a, scale=0.25, window=window, softcap=cap,
+                mesh=mesh))(q, kp, vp, bt, ln)
+            assert float(jnp.max(jnp.abs(got - ref))) < 2e-6, \
+                ("decode", n, spec, window, cap)
+            gotp = jax.jit(lambda *a: paged_prefill_attention_auto(
+                *a, scale=0.25, window=window, softcap=cap,
+                mesh=mesh))(qp, kp, vp, bt, rp, ln)
+            assert float(jnp.max(jnp.abs(gotp - refp))) < 2e-6, \
+                ("prefill", n, spec, window, cap)
+print("SHARDED_PARITY_OK")
+'''
+
+
+def test_sharded_vs_single_device_parity_forced_host_mesh():
+    """2x4 and 1x8 forced-host meshes produce bit-identical greedy tokens to
+    the 1-device engine, on both KV partition strategies, with exactly one
+    readback per round."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    env.pop("REPRO_FORCE_MESH", None)   # the script picks meshes explicitly
+    out = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert "SHARDED_PARITY_OK" in out.stdout, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-4000:]}"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    from repro.configs import get_config
+    return get_config("llama3.2-3b").smoke()
+
+
+def _engine(cfg, **kw):
+    from repro.core import SlidingServeScheduler
+    from repro.serving.engine import EngineCore
+    kw.setdefault("cache_mode", "paged")
+    return EngineCore(cfg, SlidingServeScheduler(max_budget=512,
+                                                 max_iter_time=5.0), **kw)
+
+
+def test_mesh_of_one_device_is_bit_identical(cfg):
+    """A real 1x1 mesh (in-process, no forced devices) drives the whole
+    sharded code path — device_put placement, pinned out_shardings, shard_map
+    dispatch with a 1-wide axis — and must be bit-identical to the mesh-less
+    engine, with the readback invariant intact."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.request import Request
+
+    def run(mesh):
+        eng = _engine(cfg, kv_capacity_tokens=1024, mesh=mesh)
+        reqs = [Request(rid=i, arrival=0.0, prompt_len=24 + 7 * i,
+                        max_output=4, ttft_slo=60.0, tbt_slo=60.0)
+                for i in range(3)]
+        out = eng.serve(reqs, max_wall_s=120.0)
+        assert not out["unfinished"]
+        assert eng.stats.token_readbacks == eng.stats.iterations
+        return out["outputs"]
+
+    assert run(None) == run(make_serving_mesh("1x1"))
+
+
+# =============================================================================
+# SLO-class-aware admission / eviction satellites
+# =============================================================================
+def _req(rid, cls, prompt_len=32, max_output=4, arrival=0.0):
+    from repro.serving.request import Request
+    return Request(rid=rid, arrival=arrival, prompt_len=prompt_len,
+                   max_output=max_output, ttft_slo=60.0, tbt_slo=60.0,
+                   slo_class=cls)
+
+
+def test_class_rank_mapping():
+    from repro.serving.request import class_rank
+    assert class_rank("interactive") < class_rank("standard") \
+        < class_rank("batch")
+    assert class_rank("unknown-tenant") == class_rank("standard")
+
+
+def test_pick_victim_eligibility_filter():
+    from repro.serving.block_allocator import BlockAllocator
+    a = BlockAllocator(capacity_tokens=64, block_size=16)
+    assert a.admit(1, 16) and a.admit(2, 16) and a.admit(3, 16)
+    # rid 2 filtered out: the highest-priority *eligible* candidate wins
+    vid = a.pick_victim(1, priority=lambda rid: rid,
+                        eligible=lambda rid: rid != 3)
+    assert vid == 2
+    assert a.pick_victim(1, priority=lambda rid: rid,
+                         eligible=lambda rid: False) is None
+
+
+def test_admission_order_weights_slo_class(cfg):
+    """With the free pool sized for one reservation, a later-queued
+    interactive request is admitted ahead of an earlier-queued batch request
+    (class-primary order); FIFO survives within a class."""
+    eng = _engine(cfg, kv_capacity_tokens=64, page_size=16,
+                  decode_reserve_tokens=0)          # 4 pages = one 64-prompt
+    prompts = {i: np.zeros(64, np.int32) for i in range(3)}
+    eng.add_request(_req(0, "batch", prompt_len=64), prompts[0])
+    eng.add_request(_req(1, "batch", prompt_len=64), prompts[1])
+    eng.add_request(_req(2, "interactive", prompt_len=64), prompts[2])
+    eng._admit()
+    assert [r.rid for r in eng._active] == [2], "interactive must admit first"
+    assert [r.rid for r in eng._queued] == [0, 1], "batch keeps FIFO order"
+
+
+def test_eviction_never_relegates_interactive_for_batch(cfg):
+    """Tiny pool, one interactive + two batch requests decoding: decode
+    growth must always pick a batch victim, the interactive stream must
+    finish untouched, and the per-class stats must show it."""
+    eng = _engine(cfg, kv_capacity_tokens=96, page_size=16,
+                  decode_reserve_tokens=0)          # 6 pages; 3x2-page prompts
+    reqs = [_req(0, "interactive", max_output=4),
+            _req(1, "batch", max_output=4),
+            _req(2, "batch", max_output=4)]
+    out = eng.serve(reqs, max_wall_s=120.0)
+    assert eng.stats.evictions > 0, "KV was never contended"
+    assert "interactive" not in eng.stats.evicted_by_class, \
+        eng.stats.evicted_by_class
+    assert reqs[0].state.value == "finished"
+    assert eng.stats.finished_by_class.get("interactive") == 1
+    # pool fully released afterwards
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks
+
+
+def test_summarize_by_class():
+    from repro.serving.metrics import summarize_by_class
+    rs = []
+    for i, cls in enumerate(["interactive", "interactive", "batch"]):
+        r = _req(i, cls, max_output=2)
+        r.emit_token(0.1 + i)
+        r.emit_token(0.2 + i)          # max_output=2 -> finished
+        rs.append(r)
+    out = summarize_by_class(rs, duration=10.0)
+    assert set(out) == {"interactive", "batch"}
+    assert out["interactive"]["n_requests"] == 2
+    assert out["batch"]["n_finished"] == 1
+    assert out["interactive"]["violation_rate"] == 0.0
