@@ -18,6 +18,12 @@ Exercises the step-based online API end to end on a reduced config (CPU):
 same flag as ``launch/serve.py``) runs the paged executor sharded under
 jit + shard_map; everything the demo asserts — streaming, cancel, stop
 tokens, one readback per round, page-leak freedom — must hold unchanged.
+
+``--shared-prefix`` runs the radix-prefix-cache smoke instead (the CI
+prefix-cache job): requests sharing one system prompt are served twice,
+cache on and cache off; the run asserts a non-zero hit rate, fewer computed
+prefill tokens, exact greedy-token parity between the two runs, and no page
+leak — also under a forced host mesh.
 """
 import argparse
 
@@ -28,14 +34,71 @@ from repro.launch.mesh import add_mesh_argument, make_serving_mesh
 from repro.serving.server import InferenceServer
 
 
+def shared_prefix_smoke(args):
+    """Serve a shared-system-prompt tenant mix with the prefix cache on and
+    off; assert hit rate, prefill savings, and token parity."""
+    from repro.serving.workloads import multiturn_followup
+
+    cfg = get_config(args.arch).smoke()
+    rng0 = np.random.default_rng(42)
+    system = rng0.integers(1, cfg.vocab_size, 80).astype(np.int32)
+    suffixes = [rng0.integers(1, cfg.vocab_size, 24).astype(np.int32)
+                for _ in range(4)]
+    runs = {}
+    for pc in (True, False):
+        server = InferenceServer.build(
+            cfg, cache_mode="paged",
+            kv_capacity_tokens=args.kv_tokens, prefix_cache=pc,
+            mesh=make_serving_mesh(args.mesh))
+        core = server.core
+        if pc and core.mesh is not None:
+            print(core.shard_banner())
+        toks = []
+        # sequential submits: each request arrives after the previous one
+        # prefilled, so its system prompt should match frozen pages
+        for sfx in suffixes:
+            h = server.submit(np.concatenate([system, sfx]),
+                              slo_class="standard", max_output=5)
+            toks.append(h.result())
+        # one multi-turn follow-up: matches across generated tokens too
+        p2 = multiturn_followup(np.concatenate([system, suffixes[0]]),
+                                toks[0], np.random.default_rng(7),
+                                cfg.vocab_size, turn_len=16)
+        toks.append(server.submit(p2, max_output=5).result())
+        ci = core.cache_info()
+        runs[pc] = (toks, ci)
+        assert core.stats.token_readbacks == core.stats.iterations, \
+            "prefix cache broke the one-readback-per-round property"
+        assert core.alloc.free_blocks == core.alloc.num_blocks, "KV leaked"
+        core.alloc.check_invariants()
+        print(f"prefix_cache={pc}: hit {ci['hit_tokens']}/"
+              f"{ci['prompt_tokens']} prompt tokens "
+              f"({ci['hit_rate']:.0%}), computed "
+              f"{ci['prefill_tokens_computed']}")
+    on, off = runs[True], runs[False]
+    assert on[0] == off[0], "prefix cache changed greedy tokens"
+    assert on[1]["hit_rate"] > 0, "shared system prompt never hit the cache"
+    assert on[1]["prefill_tokens_computed"] < off[1]["prefill_tokens_computed"], \
+        "cache hits did not reduce prefill work"
+    print(f"token parity OK across {len(on[0])} streams; prefill tokens "
+          f"{off[1]['prefill_tokens_computed']} -> "
+          f"{on[1]['prefill_tokens_computed']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--cache-mode", default="auto",
                     choices=["auto", "slot", "paged"])
     ap.add_argument("--kv-tokens", type=int, default=4096)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run the prefix-cache smoke (hit rate + parity "
+                         "assertions) instead of the streaming demo")
     add_mesh_argument(ap)
     args = ap.parse_args()
+    if args.shared_prefix:
+        shared_prefix_smoke(args)
+        return
 
     cfg = get_config(args.arch).smoke()
     server = InferenceServer.build(cfg, cache_mode=args.cache_mode,

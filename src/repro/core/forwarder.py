@@ -5,27 +5,48 @@ under vLLM's allocation rule — every decode request gets 1 token, then
 prefill/waiting requests take ``min(remaining, budget_left)`` in priority
 order — and predicts its execution time. ``TimeToBudget`` inverts the
 predictor by binary search (the paper's stated implementation).
+
+``class_shares`` makes the within-round prefill split **SLO-class-aware**:
+instead of handing the whole chunk budget to the priority order class-blind,
+each class rank present gets a weighted share (interactive > standard >
+batch by default), consumed in priority order within the class; whatever a
+class cannot use spills over to the global priority order (work-conserving,
+so the round never runs under-budget because one class ran dry). A
+single-class round reduces exactly to the legacy split.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.request import Request
 
 Alloc = List[Tuple[Request, int]]
 
+# Weighted chunk-budget shares by SLO class rank (see request.SLO_CLASS_RANK:
+# 0 = interactive, 1 = standard/dialogue, 2 = batch/summarization).
+DEFAULT_CLASS_SHARES: Dict[int, int] = {0: 4, 1: 2, 2: 1}
+
 
 class BatchForwarder:
-    def __init__(self, predictor, max_budget: int, budget_quantum: int = 1):
+    def __init__(self, predictor, max_budget: int, budget_quantum: int = 1,
+                 class_shares: Optional[Dict[int, int]] = None):
         self.predictor = predictor
         self.max_budget = max_budget
         self.quantum = budget_quantum  # beyond-paper: bucket budgets for JIT warmth
+        self.class_shares = class_shares   # None = class-blind legacy split
 
     # ---- batch materialization ------------------------------------------------
     def allocate(self, decoding: Sequence[Request], prefill_sorted: Sequence[Request],
                  budget: int) -> Alloc:
         alloc: Alloc = [(r, 1) for r in decoding]
         left = budget - len(decoding)
+        if left <= 0:
+            return alloc
+        if self.class_shares is not None:
+            ranks = {r.class_rank() for r in prefill_sorted}
+            if len(ranks) > 1:
+                return alloc + self._allocate_shares(prefill_sorted, left,
+                                                     ranks)
         for r in prefill_sorted:
             if left <= 0:
                 break
@@ -34,6 +55,35 @@ class BatchForwarder:
                 alloc.append((r, take))
                 left -= take
         return alloc
+
+    def _allocate_shares(self, prefill_sorted: Sequence[Request], left: int,
+                         ranks) -> Alloc:
+        """Weighted per-class shares, then work-conserving spillover.
+
+        Pass 1 caps each class at ``left * w_c / sum(w)`` (consumed in the
+        caller's priority order within the class); pass 2 hands every token
+        pass 1 could not place back to the plain priority order, topping up
+        earlier grants first. Exactly ``min(left, pending)`` tokens are
+        placed — the split never costs throughput, only rearranges it."""
+        w = {k: self.class_shares.get(k, 1) for k in ranks}
+        total_w = sum(w.values())
+        share = {k: (left * w[k]) // total_w for k in ranks}
+        taken: Dict[int, int] = {}
+        for r in prefill_sorted:
+            k = r.class_rank()
+            give = min(r.remaining_prefill(), share[k])
+            if give > 0:
+                taken[id(r)] = give
+                share[k] -= give
+        spill = left - sum(taken.values())
+        for r in prefill_sorted:
+            if spill <= 0:
+                break
+            give = min(r.remaining_prefill() - taken.get(id(r), 0), spill)
+            if give > 0:
+                taken[id(r)] = taken.get(id(r), 0) + give
+                spill -= give
+        return [(r, taken[id(r)]) for r in prefill_sorted if id(r) in taken]
 
     @staticmethod
     def to_batch(alloc: Alloc) -> List[Tuple[int, int]]:

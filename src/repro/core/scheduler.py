@@ -14,7 +14,7 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.batch_constructor import batch_constructor
-from repro.core.forwarder import Alloc, BatchForwarder
+from repro.core.forwarder import Alloc, BatchForwarder, DEFAULT_CLASS_SHARES
 from repro.core.predictor import BatchLatencyPredictor
 from repro.core.sliding_chunker import sliding_chunker, window_bounds
 from repro.core.sorter import sort_candidates
@@ -38,13 +38,20 @@ class KVPressure:
     round, so chunk budgets can back off before allocation failures force
     evict-and-recompute churn.
 
-    ``free_tokens`` — new tokens storable without eviction (free pages plus
-    owners' tail-page slack). ``evictions`` — evictions since the previous
+    ``free_tokens`` — new tokens storable without evicting a *live* request
+    (free pages, owners' tail-page slack, and reclaimable cached pages).
+    ``reclaimable_tokens`` — the prefix-cache slice of ``free_tokens``:
+    refcount-0 frozen pages the allocator reclaims LRU-first before any live
+    request is relegated. The split matters for backoff: ``utilization``
+    counts only live-referenced tokens, so a pool whose idle capacity sits
+    in reclaimable cached pages (a warm prefix cache) does not read as
+    pressure. ``evictions`` — live-request evictions since the previous
     ``schedule`` call (not lifetime)."""
 
     utilization: float = 0.0
     free_tokens: int = 1 << 30
     evictions: int = 0
+    reclaimable_tokens: int = 0
 
 
 class SchedulerBase:
@@ -56,9 +63,12 @@ class SchedulerBase:
 
     def __init__(self, predictor: Optional[BatchLatencyPredictor] = None,
                  max_budget: int = 4096, budget_quantum: int = 1,
-                 max_iter_time: float = 0.05):
+                 max_iter_time: float = 0.05, class_shares=None):
         self.predictor = predictor or BatchLatencyPredictor()
-        self.F = BatchForwarder(self.predictor, max_budget, budget_quantum)
+        # class_shares: rank -> weight for the within-round chunk-budget
+        # split (see forwarder.DEFAULT_CLASS_SHARES); None = class-blind.
+        self.F = BatchForwarder(self.predictor, max_budget, budget_quantum,
+                                class_shares=class_shares)
         self.max_budget = max_budget
         # Responsiveness guard: cap a single iteration's target duration so a
         # large chunk scheduled during a lull cannot blind the server to
@@ -114,9 +124,13 @@ class SlidingServeScheduler(SchedulerBase):
                  enable_mlps: bool = True, enable_bc: bool = True,
                  enable_sliding: bool = True, clamp_current: bool = True,
                  knapsack_granularity: int = 16, max_iter_time: float = 0.05,
-                 objective: str = "tokens"):
+                 objective: str = "tokens",
+                 class_shares=DEFAULT_CLASS_SHARES):
+        # SlidingServe defaults to class-aware budget shares (the baselines
+        # stay class-blind: that is what they are baselines *of*).
         super().__init__(predictor, max_budget, budget_quantum,
-                         max_iter_time=max_iter_time)
+                         max_iter_time=max_iter_time,
+                         class_shares=class_shares)
         self.objective = objective
         self.alpha = alpha
         self.enable_mlps = enable_mlps

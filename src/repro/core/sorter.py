@@ -35,7 +35,12 @@ def priority_key(req: Request, t: float, rho: float, alpha: float,
     u = normalized_urgency(req, t, rho)
     e = 1 if u > alpha else 0
     expired = 1 if (relegate_expired and req.ttft_slack(t) < 0) else 0
-    return (expired, 1 - g, 1 - e, req.remaining_prefill(), req.arrival)
+    # cache-aware tie-break (after remaining work, before FIFO): among equal
+    # remaining-prefill candidates, prefer the larger frozen-prefix hit —
+    # its KV is already resident, so finishing it frees budget soonest and
+    # keeps the shared chain hot.
+    return (expired, 1 - g, 1 - e, req.remaining_prefill(),
+            -req.cached_prefix, req.arrival)
 
 
 def sort_candidates(prefilling: Sequence[Request], waiting: Sequence[Request],

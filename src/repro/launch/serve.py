@@ -54,6 +54,11 @@ def main(argv=None):
     ap.add_argument("--kv-tokens", type=int, default=4096,
                     help="paged KV capacity in tokens")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reuse frozen KV pages across requests sharing a "
+                         "token prefix (paged mode; greedy tokens are "
+                         "bit-identical either way)")
     add_mesh_argument(ap)
     args = ap.parse_args(argv)
 
@@ -65,7 +70,8 @@ def main(argv=None):
     core = EngineCore(cfg, sched, cache_mode=args.cache_mode,
                       max_slots=4, max_len=512,
                       kv_capacity_tokens=args.kv_tokens,
-                      page_size=args.page_size, mesh=mesh)
+                      page_size=args.page_size, mesh=mesh,
+                      prefix_cache=args.prefix_cache)
     server = InferenceServer(core)
     if core.mesh is not None:
         print(core.shard_banner())
@@ -86,6 +92,11 @@ def main(argv=None):
           f"iterations={st.iterations} "
           f"max_concurrency={st.max_concurrency} evictions={st.evictions} "
           f"wall={out['wall']:.1f}s")
+    if core.cache_mode == "paged" and core.prefix_cache:
+        ci = core.cache_info()
+        print(f"prefix cache: hit {ci['hit_tokens']}/{ci['prompt_tokens']} "
+              f"prompt tokens ({ci['hit_rate']:.0%}), "
+              f"{ci['cached_pages']} pages cached")
     for h in out["finished"]:
         r = h.request
         print(f"  req {r.rid}: ttft={(r.first_token_time - r.arrival):.2f}s "

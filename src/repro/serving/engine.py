@@ -150,6 +150,10 @@ class EngineStats:
     aborted: int = 0              # requests cancelled via abort()
     max_concurrency: int = 0      # peak simultaneously-admitted requests
     max_round_calls: int = 0      # peak model dispatches in one scheduler round
+    # ---- prefix-cache accounting (paged mode) --------------------------------
+    cache_hit_tokens: int = 0     # prompt tokens served from frozen pages
+    prompt_tokens: int = 0        # prompt tokens admitted (hit-rate denominator)
+    prefill_tokens: int = 0       # prompt tokens actually computed
     # ---- zero-sync hot-path accounting (paged mode) --------------------------
     token_readbacks: int = 0      # device->host token-id transfers
     sync_s: float = 0.0           # wall time blocked waiting on the device
@@ -195,6 +199,14 @@ class EngineCore:
     ``mesh``: paged mode only — run the fused steps sharded (see the module
     docstring); ``None`` is the exact single-device engine. Slot mode
     ignores it (recurrent/MLA archs stay single-device).
+    ``prefix_cache``: paged mode only — reuse frozen full pages across
+    requests sharing a token prefix (system prompts, multi-turn). Admission
+    consults ``BlockAllocator.match_prefix`` and prefill starts *after* the
+    matched prefix; fully-written pages are committed (frozen) into the
+    content index as prefill/decode advances. Greedy tokens are bit-identical
+    with the cache on or off — cached K/V pages hold exactly the values
+    recompute would produce (K/V are per-token projections, independent of
+    chunking), so only the amount of prefill work changes.
     """
 
     def __init__(self, cfg: ModelConfig, scheduler: SchedulerBase, *,
@@ -202,7 +214,7 @@ class EngineCore:
                  max_slots: int = 8, max_len: int = 512,
                  kv_capacity_tokens: Optional[int] = None,
                  page_size: int = 16, decode_reserve_tokens: int = 64,
-                 overlap: bool = True, mesh=None,
+                 overlap: bool = True, mesh=None, prefix_cache: bool = True,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
         if cache_mode == "auto":
             cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
@@ -245,6 +257,7 @@ class EngineCore:
                                   # "empty" | "no-decision" | "idle"
         self._inflight: Optional[_InflightRound] = None
 
+        self.prefix_cache = bool(prefix_cache) and cache_mode == "paged"
         if cache_mode == "paged":
             capacity = kv_capacity_tokens or max_slots * max_len
             self.alloc = BlockAllocator(capacity, page_size)
@@ -538,15 +551,34 @@ class EngineCore:
                     # admission *reserves* the full prompt + decode headroom
                     # so concurrent admits are gated by the same free pool
                     # (admit(rid, 0) would let every fitting prompt in at
-                    # once and convert admission control into evict thrash)
+                    # once and convert admission control into evict thrash).
+                    # With the prefix cache on, frozen pages matching the
+                    # prompt are reused in place of fresh allocations — the
+                    # match is capped at prompt_len - 1 so at least one
+                    # prompt token is always computed for first-token logits.
+                    need = r.remaining_prefill()
                     ok = self.alloc.admit(
-                        r.rid, r.remaining_prefill() + self.decode_reserve)
+                        r.rid, need + self.decode_reserve,
+                        token_ids=(self._prompts[r.rid]
+                                   if self.prefix_cache else None),
+                        match_limit=r.prompt_len - 1)
                 else:
                     ok = self._assign_slot(r) is not None
                 if ok:
                     self._active.append(r)
                     if paged:
-                        self._length[r.rid] = 0
+                        matched = self.alloc.cached_tokens(r.rid)
+                        self._length[r.rid] = matched
+                        if matched:
+                            # prefill resumes after the frozen prefix: the
+                            # whole scheduler stack (remaining_prefill,
+                            # predictor features, chunk budgets) sees only
+                            # the uncached remainder, while context_len
+                            # still counts the reused tokens.
+                            r.prefilled = matched
+                            r.cached_prefix = matched
+                        self.stats.cache_hit_tokens += matched
+                        self.stats.prompt_tokens += r.prompt_len
                     self._event(EventKind.ADMITTED, r.rid, self._now())
                 else:
                     self._queued.append(r)
@@ -797,12 +829,62 @@ class EngineCore:
         not against block reservations: admission already reserves each
         prompt, so reserved-but-uncomputed space is precisely what scheduled
         prefill tokens consume — counting it as used would throttle chunk
-        budgets exactly when there is nothing to protect."""
+        budgets exactly when there is nothing to protect.
+
+        With the prefix cache, shared pages are counted once however many
+        owners reference them (each frozen live page holds exactly
+        ``page_size`` written tokens; an owner's private remainder is its
+        resident length minus its frozen prefix), and refcount-0 cached
+        pages count as *reclaimable* free space — live pressure must not
+        back budgets off just because the reclaimable cache is warm."""
         capacity = self.alloc.num_blocks * self.page_size
-        computed = sum(self._length.get(rid, 0) for rid in self.alloc.owners)
+        ps = self.page_size
+        computed = ps * self.alloc.referenced_committed_blocks() + sum(
+            max(self._length.get(rid, 0) - ps * self.alloc.committed_count(rid),
+                0)
+            for rid in self.alloc.owners)
         return KVPressure(utilization=computed / capacity,
                           free_tokens=capacity - computed,
+                          reclaimable_tokens=self.alloc.cached_blocks * ps,
                           evictions=self._last_round_evictions)
+
+    # ---- prefix-cache plumbing ----------------------------------------------
+    def _content_upto(self, rid: int, upto: int) -> np.ndarray:
+        """Token content of ``rid``'s first ``upto`` cache positions: the
+        (possibly eviction-grown) prompt, then emitted tokens from the
+        folded offset on — exactly what the dispatched writes put there."""
+        prompt = self._prompts[rid]
+        if upto <= len(prompt):
+            return prompt[:upto]
+        gen = self._tokens_out.get(rid, [])
+        folded = self._folded.get(rid, 0)
+        tail = np.asarray(gen[folded:folded + upto - len(prompt)], np.int32)
+        return np.concatenate([prompt, tail])
+
+    def _commit(self, rid: int) -> None:
+        """Freeze ``rid``'s fully-written pages into the content index (a
+        no-op until the resident length crosses the next page boundary).
+        Called only after the covering writes were dispatched: any future
+        reader matches the pages in a *later* dispatch, so device-order
+        guarantees it sees the written content."""
+        if not self.prefix_cache or rid not in self.alloc.owners:
+            return
+        upto = self._length.get(rid, 0)
+        if (upto // self.page_size > self.alloc.committed_count(rid)
+                and not self.alloc.commit_stalled(rid)):
+            self.alloc.commit(rid, self._content_upto(rid, upto), upto)
+
+    def cache_info(self) -> Dict:
+        """Prefix-cache hit/commit accounting (BENCH_goodput.json record)."""
+        st = self.stats
+        info = {"prefix_cache": self.prefix_cache,
+                "hit_tokens": st.cache_hit_tokens,
+                "prompt_tokens": st.prompt_tokens,
+                "hit_rate": st.cache_hit_tokens / max(st.prompt_tokens, 1),
+                "prefill_tokens_computed": st.prefill_tokens}
+        if self.cache_mode == "paged":
+            info.update(self.alloc.cache_stats())
+        return info
 
     def _evict(self, victim: Request) -> None:
         """Relegate ``victim`` (recompute-on-resume): drop its pages and fold
@@ -838,6 +920,7 @@ class EngineCore:
             victim.recomputed = victim.generated - 1
             self._resumed.add(victim.rid)
         victim.prefilled = 0
+        victim.cached_prefix = 0      # re-matched (if at all) at re-admission
         victim.state = ReqState.WAITING
         self._length.pop(victim.rid, None)
         if victim in self._active:
@@ -1212,6 +1295,9 @@ class EngineCore:
             ctxs = {r.rid: r.context_len() for r, _ in prefill_rows}
             chunk_asms = self._assemble_prefill(prefill_rows, prompts)
             executed += [(r, n, ctxs[r.rid]) for r, n in prefill_rows]
+            for r, n in prefill_rows:
+                self.stats.prefill_tokens += n
+                self._commit(r.rid)   # freeze pages this round fills
 
         # ---- the round's single sync: round N's token ids -------------------
         self._flush_round()
@@ -1233,6 +1319,11 @@ class EngineCore:
                 prev = self._tokens_out.get(rid)
                 asm["tokens"][i, 0] = prev[-1] if prev else 0
                 emits.append((rid, off + i))
+                # the write slot this row fills (position _length-1) may have
+                # completed a page; its content — prompt + emitted ids — is
+                # host-known now, so decode pages freeze too (multi-turn
+                # follow-ups match across generated output).
+                self._commit(rid)
             toks.append(self._dispatch(asm))
             off += asm["Rb"]
         for asm in chunk_asms:

@@ -65,6 +65,8 @@ class Request:
     # --- runtime state -------------------------------------------------------
     state: ReqState = ReqState.WAITING
     prefilled: int = 0               # c_i(t): prompt tokens already computed
+    cached_prefix: int = 0           # prompt tokens served by the prefix cache
+                                     # at admission (counted inside prefilled)
     generated: int = 0               # output tokens emitted
     recomputed: int = 0              # emitted tokens folded into the prompt by
                                      # evict-and-recompute (still in generated)

@@ -157,6 +157,53 @@ def make_workload(spec: WorkloadSpec, cost_model: CostModel) -> List[Request]:
 
 
 # ---------------------------------------------------------------------------
+# prefix-sharing scenarios (radix prefix cache: shared system prompts and
+# multi-turn chat; these need real token ids, so they return prompts too)
+# ---------------------------------------------------------------------------
+def make_shared_prefix_workload(n: int, vocab_size: int, *,
+                                system_len: int = 96, unique_len: int = 32,
+                                max_output: int = 6, qps: float = 0.0,
+                                slo_class: str = "standard",
+                                ttft_slo: float = 60.0, tbt_slo: float = 60.0,
+                                seed: int = 0, rid0: int = 0
+                                ) -> Tuple[List[Request], Dict[int, np.ndarray]]:
+    """The production shared-system-prompt scenario: ``n`` requests whose
+    prompts share one ``system_len``-token prefix and differ only in a
+    ``unique_len``-token suffix (few-shot templates, RAG headers, agent
+    system prompts). With the engine's prefix cache on, every request after
+    the first should prefill only its suffix plus the shared prefix's
+    partial tail page. ``qps=0`` arrives everything at t=0 (a burst);
+    otherwise arrivals are Poisson. Returns ``(requests, prompts)``."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, vocab_size, system_len).astype(np.int32)
+    arrivals = (np.zeros(n) if qps <= 0
+                else np.cumsum(rng.exponential(1.0 / qps, n)))
+    reqs, prompts = [], {}
+    for i in range(n):
+        rid = rid0 + i
+        suffix = rng.integers(1, vocab_size, unique_len).astype(np.int32)
+        prompts[rid] = np.concatenate([system, suffix])
+        reqs.append(Request(rid=rid, arrival=float(arrivals[i]),
+                            prompt_len=system_len + unique_len,
+                            max_output=max_output, ttft_slo=ttft_slo,
+                            tbt_slo=tbt_slo, slo_class=slo_class))
+    return reqs, prompts
+
+
+def multiturn_followup(prompt: np.ndarray, output_ids: Sequence[int],
+                       rng: np.random.Generator, vocab_size: int,
+                       turn_len: int = 24) -> np.ndarray:
+    """Next-turn prompt of a chat conversation: the full transcript so far
+    (previous prompt + generated reply) plus a fresh ``turn_len``-token user
+    turn. Submitted against a warm prefix cache, everything but the new turn
+    (and the transcript's partial tail page) should match frozen pages —
+    including pages frozen *during decode* of the previous turn."""
+    turn = rng.integers(1, vocab_size, turn_len).astype(np.int32)
+    return np.concatenate([np.asarray(prompt, np.int32),
+                           np.asarray(list(output_ids), np.int32), turn])
+
+
+# ---------------------------------------------------------------------------
 # open-loop live-arrival driver (streaming frontend)
 # ---------------------------------------------------------------------------
 def run_open_loop(server, requests: Sequence[Request],

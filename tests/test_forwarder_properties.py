@@ -93,3 +93,55 @@ def test_chunker_liveness_and_budget_bounds(prompts, t_cur, t_next):
     assert alloc, "liveness: pending work must be scheduled"
     assert pred <= t_cur + 1e-9, "clamp: current window may not exceed T_cur"
     assert b <= sum(prompts), "budget never exceeds pending work"
+
+
+# ---------------------------------------------------------------------------
+# class-aware within-round budget shares (work-conserving spillover)
+# ---------------------------------------------------------------------------
+def mk_classed(rid, prompt, slo_class):
+    r = mk_prefill(rid, prompt)
+    r.slo_class = slo_class
+    return r
+
+
+def test_class_shares_weight_interactive_over_batch():
+    """With both classes hungry, the split follows the rank weights instead
+    of handing the whole budget to whoever sorts first."""
+    from repro.core.forwarder import DEFAULT_CLASS_SHARES
+    F = BatchForwarder(LinearPredictor(), max_budget=8192,
+                       class_shares=DEFAULT_CLASS_SHARES)
+    # batch-class request sorts FIRST (priority order favors it), yet the
+    # interactive request still receives its weighted share
+    P = [mk_classed(0, 1000, "batch"), mk_classed(1, 1000, "interactive")]
+    alloc = F.allocate([], P, 100)
+    got = {r.rid: n for r, n in alloc}
+    assert sum(got.values()) == 100            # work-conserving
+    assert got[1] == 80 and got[0] == 20       # 4:1 weights
+
+
+def test_class_shares_spill_over_when_a_class_runs_dry():
+    """A class that cannot consume its share donates the remainder — the
+    round never runs under budget because one class ran out of work."""
+    from repro.core.forwarder import DEFAULT_CLASS_SHARES
+    F = BatchForwarder(LinearPredictor(), max_budget=8192,
+                       class_shares=DEFAULT_CLASS_SHARES)
+    P = [mk_classed(0, 10, "interactive"), mk_classed(1, 1000, "batch")]
+    alloc = F.allocate([], P, 100)
+    got = {r.rid: n for r, n in alloc}
+    assert got[0] == 10 and got[1] == 90
+    assert sum(got.values()) == 100
+
+
+def test_single_class_round_reduces_to_legacy_split():
+    """One class present -> exactly the class-blind priority-order split
+    (decodes first, then prefill in order until the budget runs out)."""
+    from repro.core.forwarder import DEFAULT_CLASS_SHARES
+    shared = dict(max_budget=8192)
+    F_aware = BatchForwarder(LinearPredictor(), class_shares=DEFAULT_CLASS_SHARES,
+                             **shared)
+    F_blind = BatchForwarder(LinearPredictor(), **shared)
+    P = [mk_classed(i, 300, "standard") for i in range(4)]
+    D = [mk_decode(100 + i, 64) for i in range(3)]
+    a1 = [(r.rid, n) for r, n in F_aware.allocate(D, P, 512)]
+    a2 = [(r.rid, n) for r, n in F_blind.allocate(D, P, 512)]
+    assert a1 == a2

@@ -1,0 +1,283 @@
+"""Copy-on-write radix prefix cache: allocator refcount/eviction semantics
+and engine-level reuse with bit-identical greedy tokens.
+
+The hard invariant under test everywhere: enabling the cache changes how
+much prefill work runs, never what it computes — greedy token streams are
+bitwise equal with the cache on or off, through sharing, eviction, partial
+reclaim and multi-turn reuse.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SlidingServeScheduler
+from repro.serving.block_allocator import BlockAllocator
+from repro.serving.engine import EngineCore
+from repro.serving.request import ReqState, Request
+from repro.serving.server import InferenceServer
+from repro.serving.workloads import (make_shared_prefix_workload,
+                                     multiturn_followup)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-3b").smoke()
+
+
+def _ids(n, seed=0):
+    return (np.random.default_rng(seed).integers(1, 1000, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# allocator layer: match / commit / refcount / reclaim
+# ---------------------------------------------------------------------------
+def test_match_commit_and_refcounted_sharing():
+    a = BlockAllocator(capacity_tokens=512, block_size=16)   # 32 pages
+    ids = _ids(100)
+    assert a.admit(1, 80, token_ids=ids, match_limit=79)
+    assert a.cached_tokens(1) == 0           # cold cache
+    a.commit(1, ids, 80)                     # freeze 5 full pages
+    assert a.committed_count(1) == 5
+    # an identical prompt reuses the frozen chain instead of fresh pages
+    free_before = len(a._free_ids)
+    assert a.admit(2, 96, token_ids=ids, match_limit=95)
+    assert a.cached_tokens(2) == 80
+    assert a.page_table(2)[:5] == a.page_table(1)[:5]   # physically shared
+    assert free_before - len(a._free_ids) == 1          # only the tail page
+    a.check_invariants()
+    # divergent content does not match
+    other = ids.copy()
+    other[3] += 1
+    assert a.admit(3, 64, token_ids=other, match_limit=63)
+    assert a.cached_tokens(3) == 0
+    a.check_invariants()
+
+
+def test_free_decrefs_and_shared_pages_survive_owner_eviction():
+    """Evict-and-recompute of one owner must never touch a shared page: the
+    other owner keeps reading it, and only refcount-0 pages become
+    reclaimable."""
+    a = BlockAllocator(capacity_tokens=512, block_size=16)
+    ids = _ids(64, seed=1)
+    assert a.admit(1, 64, token_ids=ids, match_limit=63)
+    a.commit(1, ids, 64)                     # 4 pages (63//16 = 3 matched cap
+                                             # applies to *matching*, not commit)
+    assert a.admit(2, 64, token_ids=ids, match_limit=63)
+    shared = a.page_table(2)[:3]
+    assert shared == a.page_table(1)[:3]
+    a.evict(1)                               # tier-2 relegation of owner 1
+    assert a.evictions == 1 and 1 not in a.owners
+    # shared pages still live (owner 2 holds refs), 1's private tail cached/freed
+    assert all(a._nodes[p].refs == 1 for p in shared)
+    assert 2 in a.owners and a.page_table(2)[:3] == shared
+    a.check_invariants()
+    a.free(2)
+    # now the whole chain is refcount-0: reclaimable, still matchable
+    assert a.cached_blocks >= 3
+    _, ml = a.match_prefix(ids, max_tokens=63)
+    assert ml == 48
+    a.check_invariants()
+
+
+def test_reclaim_invalidates_hash_entries_leaves_first():
+    a = BlockAllocator(capacity_tokens=128, block_size=16)   # 8 pages
+    ids = _ids(64, seed=2)
+    assert a.admit(1, 64, token_ids=ids)
+    a.commit(1, ids, 64)                     # 4 committed pages
+    a.free(1)
+    assert a.cached_blocks == 4 and a.free_blocks == a.num_blocks
+    # allocating 6 pages reclaims 2 cached pages — the *deepest* (leaf)
+    # entries go first, so the surviving prefix stays matchable
+    assert a.admit(2, 96)
+    assert a.cache_reclaimed == 2
+    _, ml = a.match_prefix(ids)
+    assert ml == 32                          # chain shortened from the tail
+    # the reclaimed keys are really gone from the index
+    assert len(a._index) == 2 and len(a._nodes) == 2
+    a.check_invariants()
+    a.free(2)
+    a.check_invariants()
+
+
+def test_readmission_rematches_after_partial_reclaim():
+    a = BlockAllocator(capacity_tokens=256, block_size=16)
+    ids = _ids(96, seed=3)
+    assert a.admit(1, 96, token_ids=ids, match_limit=95)
+    a.commit(1, ids, 96)
+    a.free(1)
+    # partial reclaim: 10 free + 6 cached; taking 12 reclaims 2 leaves
+    assert a.admit(9, 192)
+    assert a.cache_reclaimed == 2
+    a.free(9)
+    # the same request re-admits and matches exactly the surviving prefix
+    assert a.admit(1, 96, token_ids=ids, match_limit=95)
+    assert a.cached_tokens(1) == 64
+    a.check_invariants()
+    # and its commit pointer continues past the re-matched pages
+    a.commit(1, ids, 96)
+    assert a.committed_count(1) == 6
+    a.check_invariants()
+
+
+def test_counting_api_unchanged_without_token_ids():
+    """The analytic simulator's path: no ids, no matches, exact legacy
+    accounting (free_blocks == free + cached still holds trivially)."""
+    a = BlockAllocator(capacity_tokens=160, block_size=16)
+    assert a.can_admit(100, 32)
+    assert not a.can_admit(200)
+    assert a.admit(1, 128)
+    assert not a.admit(2, 64)
+    a.free(1)
+    assert a.admit(2, 64)
+    assert a.cached_tokens(2) == 0
+    a.free(2)
+    assert a.free_blocks == a.num_blocks == 10
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine layer
+# ---------------------------------------------------------------------------
+def _engine(cfg, prefix_cache, max_budget=256, **kw):
+    sched = SlidingServeScheduler(max_budget=max_budget, max_iter_time=5.0)
+    kw.setdefault("kv_capacity_tokens", 4096)
+    return EngineCore(cfg, sched, cache_mode="paged",
+                      prefix_cache=prefix_cache, **kw)
+
+
+def test_shared_prefix_parity_and_hit_rate(cfg):
+    """Staggered arrivals over one system prompt: later requests must reuse
+    frozen pages (hit rate > 0, less prefill computed) and the greedy token
+    streams must be bitwise identical to a cache-off run."""
+    reqs, prompts = make_shared_prefix_workload(
+        5, cfg.vocab_size, system_len=64, unique_len=24, max_output=4,
+        qps=3.0, seed=11)
+    outs, stats = {}, {}
+    for pc in (True, False):
+        eng = _engine(cfg, pc)
+        out = eng.serve([dataclasses.replace(r) for r in reqs],
+                        {k: v.copy() for k, v in prompts.items()},
+                        max_wall_s=600.0)
+        assert not out["unfinished"]
+        outs[pc], stats[pc] = out["outputs"], eng.stats
+        # zero-sync + leak invariants survive the cache
+        assert eng.stats.token_readbacks == eng.stats.iterations
+        assert eng.alloc.free_blocks == eng.alloc.num_blocks
+        eng.alloc.check_invariants()
+    assert outs[True] == outs[False], "prefix cache changed greedy tokens"
+    assert stats[True].cache_hit_tokens > 0
+    assert stats[True].prefill_tokens < stats[False].prefill_tokens
+    assert stats[False].cache_hit_tokens == 0
+
+
+def test_multiturn_matches_across_generated_pages(cfg):
+    """Turn 2 resubmits turn 1's transcript: the match must extend past the
+    prompt into pages frozen during *decode*, and outputs must equal the
+    cache-off run."""
+    results = {}
+    for pc in (True, False):
+        server = InferenceServer(_engine(cfg, pc))
+        rng = np.random.default_rng(5)
+        p1 = rng.integers(1, cfg.vocab_size, 48).astype(np.int32)
+        out1 = server.submit(p1, max_output=20).result()
+        p2 = multiturn_followup(p1, out1, rng, cfg.vocab_size, turn_len=16)
+        out2 = server.submit(p2, max_output=4).result()
+        results[pc] = (out1, out2)
+        if pc:
+            # transcript = 48 prompt + 20 generated = 68 tokens -> at least
+            # 4 frozen pages (64 tokens) must match, crossing the boundary
+            # between prompt-committed and decode-committed pages
+            assert server.core.stats.cache_hit_tokens >= 64
+    assert results[True] == results[False]
+
+
+def test_cancel_mid_prefill_decrefs_shared_pages(cfg):
+    """Cancelling a request mid-prefill releases its refs immediately; pages
+    it shared stay live for the other holder, its private pages return."""
+    server = InferenceServer(_engine(cfg, True, max_budget=64))
+    core = server.core
+    rng = np.random.default_rng(3)
+    shared = rng.integers(1, cfg.vocab_size, 64).astype(np.int32)
+    # request A prefills + finishes: its prefix pages are frozen
+    server.submit(shared, max_output=2).result()
+    # B and C share A's prefix; B gets a long private tail
+    pb = np.concatenate([shared, rng.integers(1, cfg.vocab_size, 200).astype(np.int32)])
+    pc_ = np.concatenate([shared, rng.integers(1, cfg.vocab_size, 16).astype(np.int32)])
+    hb = server.submit(pb, max_output=4)
+    hc = server.submit(pc_, max_output=4)
+    rb = hb.request
+    for _ in range(10_000):
+        server.step()
+        if rb.state == ReqState.PREFILLING and rb.prefilled < rb.prompt_len:
+            break
+    assert rb.prefilled < rb.prompt_len, "never caught B mid-prefill"
+    assert core.alloc.cached_tokens(rb.rid) >= 64
+    shared_pids = core.alloc.page_table(rb.rid)[:4]
+    free_before = core.alloc.free_blocks
+    blocks_held = core.alloc.owners[rb.rid].blocks
+    hb.cancel()
+    assert rb.rid not in core.alloc.owners
+    # every page B held came back (shared ones as live-for-C or cached,
+    # private ones as free); C still reads the shared chain
+    assert core.alloc.free_blocks >= free_before + blocks_held - 4
+    core.alloc.check_invariants()
+    out_c = hc.result()
+    assert len(out_c) == 4
+    # parity: C's stream equals a cache-off replay of the same prompt
+    ref = InferenceServer(_engine(cfg, False))
+    assert ref.submit(pc_, max_output=4).result() == out_c
+    assert all(p in core.alloc._nodes or p in core.alloc._free_ids
+               or any(p in core.alloc.owners[r].page_ids
+                      for r in core.alloc.owners)
+               for p in shared_pids)
+
+
+def test_eviction_recompute_with_warm_cache_parity(cfg):
+    """Contended pool + shared prefixes: evict-and-recompute interacts with
+    frozen pages (victims decref, resumed requests re-match what survives)
+    and still reproduces the uncontended greedy streams exactly."""
+    reqs, prompts = make_shared_prefix_workload(
+        4, cfg.vocab_size, system_len=48, unique_len=16, max_output=6,
+        qps=6.0, seed=13)
+    ref_eng = _engine(cfg, True, kv_capacity_tokens=4096)
+    ref = ref_eng.serve([dataclasses.replace(r) for r in reqs],
+                        {k: v.copy() for k, v in prompts.items()},
+                        max_wall_s=600.0)
+    assert not ref["unfinished"] and ref_eng.stats.evictions == 0
+    eng = _engine(cfg, True, kv_capacity_tokens=128,
+                  decode_reserve_tokens=0)
+    out = eng.serve([dataclasses.replace(r) for r in reqs],
+                    {k: v.copy() for k, v in prompts.items()},
+                    max_wall_s=600.0)
+    assert not out["unfinished"]
+    # both eviction tiers really fired: cached pages reclaimed (tier 1) and
+    # live requests relegated (tier 2)
+    assert eng.stats.evictions > 0 and eng.alloc.cache_reclaimed > 0
+    assert out["outputs"] == ref["outputs"], "recompute under a warm cache diverged"
+    eng.alloc.check_invariants()
+    assert eng.alloc.free_blocks == eng.alloc.num_blocks
+
+
+def test_prefix_cache_parity_on_mesh_of_one(cfg):
+    """A real 1x1 mesh drives the sharded executor code path (jit +
+    shard_map, pinned out_shardings); the prefix cache must hit and stay
+    bit-identical there too — page layouts survive the mesh. (The 2x4
+    forced-host parity runs in CI's prefix-cache-smoke job.)"""
+    from repro.launch.mesh import make_serving_mesh
+
+    def run(mesh, pc):
+        reqs, prompts = make_shared_prefix_workload(
+            4, cfg.vocab_size, system_len=64, unique_len=16, max_output=3,
+            qps=4.0, seed=21)
+        eng = _engine(cfg, pc, mesh=mesh)
+        out = eng.serve(reqs, prompts, max_wall_s=600.0)
+        assert not out["unfinished"]
+        return out["outputs"], eng.stats.cache_hit_tokens
+
+    base, _ = run(None, True)
+    meshed, hits = run(make_serving_mesh("1x1"), True)
+    plain, zero = run(make_serving_mesh("1x1"), False)
+    assert base == meshed == plain
+    assert hits > 0 and zero == 0
