@@ -335,6 +335,166 @@ def prefix_cache_comparison(n_requests: int = 8, seed: int = 0) -> dict:
     return results
 
 
+def router_comparison(replicas: int = 2, seed: int = 0) -> dict:
+    """Multi-replica routing A/B on real engines: the shared-prefix +
+    background-batch trace served three ways — one engine (the token-parity
+    reference), ``replicas`` engines behind the **prefix-affine** router,
+    and the same fleet behind cache-blind **round-robin**.
+
+    Asserts (the router-smoke CI job's acceptance gates):
+    * greedy tokens bit-identical across all three (replicas share seed=0
+      params, so placement must never change outputs);
+    * the affine run's directory hit rate > 50% (the shared stream lands on
+      its holder);
+    * the affine run's computed-token imbalance (max/min per-replica
+      prefill+decode tokens) below round-robin's on the same trace.
+
+    Records per-replica goodput, peak queue depth, computed tokens, the
+    directory hit rate and the imbalance under ``router`` in
+    ``BENCH_goodput.json``."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core import SlidingServeScheduler
+    from repro.frontend.router import EngineRouter, LocalReplica
+    from repro.serving.engine import EngineStats
+    from repro.serving.server import InferenceServer
+    from repro.serving.workloads import make_router_workload, run_open_loop
+
+    cfg = get_config("llama3.2-3b").smoke()
+
+    def mk_server():
+        s = InferenceServer.build(
+            cfg, scheduler=SlidingServeScheduler(max_budget=512,
+                                                 max_iter_time=5.0),
+            cache_mode="paged", kv_capacity_tokens=4096, page_size=16)
+        # JIT warmup before the measured trace: compile the trace's prefill
+        # buckets (400/120-token prompts) and the multi-row decode shapes a
+        # concurrent burst reaches — cold compiles take seconds and would
+        # swallow the arrival spacing the directory needs (commits must land
+        # between arrivals for affinity to engage).
+        rng = np.random.default_rng(7)
+        for i, n in enumerate((400, 120, 120, 120)):
+            s.submit(rng.integers(1, cfg.vocab_size, n).astype(np.int32),
+                     max_output=4, rid=90_000 + i)
+        s.run(max_wall_s=600.0)
+        for i in range(4):
+            s.release(90_000 + i)
+        s.core.stats = EngineStats()
+        return s
+
+    # calibrate the arrival gap to this machine's engine speed. The gap must
+    # sit in a window: above the commit latency (pages freeze at the end of
+    # the prefill round, ~2 rounds — so the first shared request's pages are
+    # in the directory before the second routes) but below the end-to-end
+    # service time (so work overlaps and load-aware placement has load to
+    # see — fully serial arrivals would leave every replica idle at every
+    # placement). One warmed 120-token + 6-token request is ~7 rounds; a gap
+    # of ~4 round-times lands in the window.
+    rng = np.random.default_rng(11)
+    cal = mk_server()
+    import time as _time
+    t0 = _time.perf_counter()
+    cal.submit(rng.integers(1, cfg.vocab_size, 120).astype(np.int32),
+               max_output=6, rid=90_100)
+    cal.run(max_wall_s=600.0)
+    gap_s = min(max(0.6 * (_time.perf_counter() - t0), 0.2), 3.0)
+    emit("router/arrival_gap_s", f"{gap_s:.2f}",
+         "~4 round-times (one warmed request is ~7 rounds)")
+
+    def workload():
+        # heavy_output=64: the heavy request must still be decoding while
+        # the shared stream and the trailing batch arrive, or there is no
+        # load for placement to balance against
+        return make_router_workload(cfg.vocab_size, n_shared=12,
+                                    heavy_output=64, gap_s=gap_s, seed=seed)
+
+    results = {}
+    outputs = {}
+
+    # reference: one engine, same trace (and the single-replica goodput bar)
+    reqs, prompts = workload()
+    server = mk_server()
+    out = run_open_loop(server, reqs,
+                        {k: v.copy() for k, v in prompts.items()},
+                        max_wall_s=600.0)
+    outputs["single"] = {rid: list(h.collected)
+                         for rid, h in out["handles"].items()}
+    st = server.core.stats
+    results["single"] = {
+        "finished": len(out["finished"]),
+        "wall_s": out["wall"],
+        "goodput_rps": len(out["finished"]) / max(out["wall"], 1e-9),
+        "computed_tokens": st.prefill_tokens + st.decode_tokens,
+    }
+    emit("router/single/finished", len(out["finished"]), f"of {len(reqs)}")
+
+    for policy in ("prefix-affine", "round-robin"):
+        key = policy.replace("-", "_")
+        reqs, prompts = workload()
+        router = EngineRouter([LocalReplica(i, mk_server())
+                               for i in range(replicas)], policy=policy)
+        out = router.run_open_loop(reqs, prompts, max_wall_s=600.0)
+        outputs[key] = {rid: list(h.collected)
+                        for rid, h in out["handles"].items()}
+        per_replica = []
+        computed = []
+        for rep in router.replicas:
+            st = rep.server.core.stats
+            fin = sum(1 for rid, idx in router._owner.items()
+                      if idx == rep.index
+                      and out["handles"][rid].finished
+                      and not out["handles"][rid].aborted)
+            tok = st.prefill_tokens + st.decode_tokens
+            computed.append(tok)
+            per_replica.append({
+                "finished": fin,
+                "goodput_rps": fin / max(out["wall"], 1e-9),
+                "computed_tokens": tok,
+                "peak_queue_depth": rep.peak_queue_depth,
+                "readbacks_per_round": (st.token_readbacks
+                                        / max(st.iterations, 1)),
+                "cache_hit_tokens": st.cache_hit_tokens,
+                "deferred_admissions": st.deferred_admissions,
+            })
+            # the zero-sync invariant must survive multi-replica pumping
+            assert st.token_readbacks == st.iterations, \
+                f"replica {rep.index}: readbacks != iterations under {policy}"
+        report = router.routing_report()
+        imb = max(computed) / max(min(computed), 1)
+        results[key] = {
+            "finished": len(out["finished"]),
+            "wall_s": out["wall"],
+            "per_replica": per_replica,
+            "routed": report["routed"],
+            "spills": report["spills"],
+            "affine_hits": report["affine_hits"],
+            "directory_hit_rate": report["directory"]["hit_rate"],
+            "imbalance_computed_tokens": imb,
+        }
+        emit(f"router/{key}/finished", len(out["finished"]), f"of {len(reqs)}")
+        emit(f"router/{key}/imbalance", f"{imb:.3f}",
+             "max/min per-replica computed tokens")
+        emit(f"router/{key}/directory_hit_rate",
+             f"{report['directory']['hit_rate']:.3f}", "")
+
+    assert outputs["single"] == outputs["prefix_affine"] == \
+        outputs["round_robin"], "routing changed greedy outputs"
+    results["token_parity"] = True
+    affine = results["prefix_affine"]
+    rr = results["round_robin"]
+    assert affine["directory_hit_rate"] > 0.5, \
+        f"affine directory hit rate {affine['directory_hit_rate']:.3f} <= 0.5"
+    assert affine["imbalance_computed_tokens"] < \
+        rr["imbalance_computed_tokens"], \
+        (f"affine imbalance {affine['imbalance_computed_tokens']:.3f} not "
+         f"below round-robin {rr['imbalance_computed_tokens']:.3f}")
+    emit("router/imbalance_gap",
+         f"{rr['imbalance_computed_tokens'] / affine['imbalance_computed_tokens']:.3f}x",
+         "round-robin / prefix-affine (higher = affinity wins)")
+    write_json("router", results)
+    return results
+
+
 if __name__ == "__main__":
     if "--engine" in sys.argv:
         engine_comparison()
@@ -342,5 +502,8 @@ if __name__ == "__main__":
         profile_overhead()
     elif "--prefix-cache" in sys.argv:
         prefix_cache_comparison()
+    elif "--replicas" in sys.argv:
+        n = int(sys.argv[sys.argv.index("--replicas") + 1])
+        router_comparison(replicas=n)
     else:
         main()

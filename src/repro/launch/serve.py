@@ -59,8 +59,32 @@ def main(argv=None):
                     help="reuse frozen KV pages across requests sharing a "
                          "token prefix (paged mode; greedy tokens are "
                          "bit-identical either way)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="expose the server over HTTP/SSE instead of "
+                         "replaying a synthetic workload (SIGINT drains "
+                         "gracefully; see repro.frontend.http_server)")
+    ap.add_argument("--port", type=int, default=8763,
+                    help="HTTP port for --serve-http (0 picks a free one)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --serve-http: >1 runs N engine replicas "
+                         "behind the prefix-affine router")
     add_mesh_argument(ap)
     args = ap.parse_args(argv)
+
+    if args.serve_http:
+        # the network front door owns engine construction (it builds N
+        # replicas for the router); mesh serving stays on the in-process path
+        import asyncio
+
+        from repro.frontend.http_server import HttpFrontend, build_backend
+        backend = build_backend(
+            arch=args.arch, smoke=args.smoke, replicas=args.replicas,
+            cache_mode=args.cache_mode, kv_tokens=args.kv_tokens,
+            page_size=args.page_size, max_budget=args.max_budget,
+            prefix_cache=args.prefix_cache)
+        frontend = HttpFrontend(backend, port=args.port)
+        asyncio.run(frontend.serve_forever())
+        return None
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -45,9 +45,25 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 PageKey = Tuple[int, Tuple[int, ...]]   # (parent page id or -1, page tokens)
+
+# Root of every page-chain hash (the hash "above" a prompt's first page).
+ROOT_CHAIN = b"\x00" * 8
+
+
+def page_chain_hash(parent_hash: bytes, chunk: Sequence[int]) -> bytes:
+    """Position-independent content name of one page *in its chain*: the
+    parent chain hash folded with the page's token ids. Unlike ``PageKey``
+    (which names the parent by *physical* page id and is only meaningful
+    inside one allocator), chain hashes are stable across engines and
+    processes — the cross-engine prefix directory is keyed on them."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(parent_hash)
+    h.update(" ".join(str(int(t)) for t in chunk).encode())
+    return h.digest()
 
 
 @dataclasses.dataclass
@@ -70,6 +86,7 @@ class _Node:
     children: int = 0             # committed children (reclaim leaves first)
     refs: int = 0                 # owners holding this page
     last_used: int = 0            # LRU clock tick of the last match/commit
+    chain_hash: bytes = b""       # cross-engine content name (page_chain_hash)
 
 
 class BlockAllocator:
@@ -92,6 +109,10 @@ class BlockAllocator:
         self.cache_commits = 0        # lifetime pages frozen into the index
         self.cache_hit_tokens = 0     # lifetime tokens served from the index
         self.cache_reclaimed = 0      # lifetime cached pages reclaimed (tier 1)
+        # Optional commit/reclaim observer (``on_commit(chain_hash, depth)`` /
+        # ``on_reclaim(chain_hash)``): the cross-engine prefix directory
+        # mirrors this allocator's index through these notifications.
+        self.listener = None
 
     # ---- queries --------------------------------------------------------------
     @property
@@ -251,6 +272,8 @@ class BlockAllocator:
                 if parent is not None:
                     parent.children -= 1
                 self.cache_reclaimed += 1
+                if self.listener is not None:
+                    self.listener.on_reclaim(node.chain_hash)
                 return pid
         return None
 
@@ -301,14 +324,20 @@ class BlockAllocator:
                 o.commit_stalled = True    # duplicate content, first wins
                 break
             self._clock += 1
+            parent_chain = (ROOT_CHAIN if parent == -1
+                            else self._nodes[parent].chain_hash)
             self._nodes[pid] = _Node(pid, key, parent, refs=1,
-                                     last_used=self._clock)
+                                     last_used=self._clock,
+                                     chain_hash=page_chain_hash(parent_chain,
+                                                                chunk))
             self._index[key] = pid
             if parent != -1:
                 self._nodes[parent].children += 1
             o.committed_pages += 1
             self.cache_commits += 1
             done += 1
+            if self.listener is not None:
+                self.listener.on_commit(self._nodes[pid].chain_hash, k + 1)
         return done
 
     # ---- lifecycle --------------------------------------------------------------

@@ -154,6 +154,9 @@ class EngineStats:
     cache_hit_tokens: int = 0     # prompt tokens served from frozen pages
     prompt_tokens: int = 0        # prompt tokens admitted (hit-rate denominator)
     prefill_tokens: int = 0       # prompt tokens actually computed
+    decode_tokens: int = 0        # output tokens computed (decode-step rows)
+    deferred_admissions: int = 0  # admission rounds a follower waited for an
+                                  # in-flight leader to commit a shared prefix
     # ---- zero-sync hot-path accounting (paged mode) --------------------------
     token_readbacks: int = 0      # device->host token-id transfers
     sync_s: float = 0.0           # wall time blocked waiting on the device
@@ -215,6 +218,7 @@ class EngineCore:
                  kv_capacity_tokens: Optional[int] = None,
                  page_size: int = 16, decode_reserve_tokens: int = 64,
                  overlap: bool = True, mesh=None, prefix_cache: bool = True,
+                 defer_shared: bool = True,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
         if cache_mode == "auto":
             cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
@@ -258,6 +262,14 @@ class EngineCore:
         self._inflight: Optional[_InflightRound] = None
 
         self.prefix_cache = bool(prefix_cache) and cache_mode == "paged"
+        # dependency-aware admission defer (in-flight burst sharing): when K
+        # concurrent requests share an uncommitted prefix, followers wait for
+        # the leader to commit the shared pages instead of prefilling the
+        # prefix K times (sglang-style). Only meaningful with the prefix
+        # cache on — without an index there is nothing to wait for.
+        self.defer_shared = bool(defer_shared) and self.prefix_cache
+        self._defer_rounds: Dict[int, int] = {}   # rid -> rounds deferred
+        self._defer_cap = 512                     # livelock safety valve
         if cache_mode == "paged":
             capacity = kv_capacity_tokens or max_slots * max_len
             self.alloc = BlockAllocator(capacity, page_size)
@@ -478,6 +490,27 @@ class EngineCore:
         """Requests that have arrived but hold no KV yet (admission queue)."""
         return len(self._queued)
 
+    def outstanding_tokens(self) -> int:
+        """Token-work the engine still owes across every live request:
+        uncomputed prompt tokens plus remaining output budget. This is the
+        router's load signal — queue depth weighted by per-request estimated
+        cost — so it counts queued *and* active requests (queued work is
+        exactly what a newly routed request would wait behind)."""
+        tot = 0
+        for r in self._reqs.values():
+            if r.state in (ReqState.FINISHED, ReqState.ABORTED):
+                continue
+            tot += r.remaining_prefill() + max(r.max_output - r.generated, 0)
+        return tot
+
+    def class_queue_depth(self, max_rank: int) -> int:
+        """Live requests at SLO-class rank ``max_rank`` or more critical —
+        the work a new request of that rank would queue behind (the router's
+        class-aware tie-break: interactive must not queue behind batch)."""
+        return sum(1 for r in self._reqs.values()
+                   if r.state not in (ReqState.FINISHED, ReqState.ABORTED)
+                   and r.class_rank() <= max_rank)
+
     @property
     def last_round_evictions(self) -> int:
         """Evictions the most recent executed round caused (wedge guards use
@@ -515,6 +548,7 @@ class EngineCore:
         else:
             self._release_slot(r)
         self._resumed.discard(r.rid)
+        self._defer_rounds.pop(r.rid, None)
         if r in self._active:
             self._active.remove(r)
         self._reqs.pop(r.rid, None)
@@ -522,6 +556,61 @@ class EngineCore:
         # transcripts (_tokens_out) and the _done list are intentionally
         # kept: serve()'s return contract exposes them after retirement.
         self._prompts.pop(r.rid, None)
+
+    # ---- in-flight burst sharing (dependency-aware admission defer) ----------
+    def _shared_whole_pages(self, a: np.ndarray, b: np.ndarray) -> int:
+        """Whole pages of common prefix between two token arrays."""
+        ps = self.page_size
+        n = min(len(a), len(b)) // ps * ps
+        if n == 0:
+            return 0
+        eq = a[:n] == b[:n]
+        if eq.all():
+            return n // ps
+        return int(np.argmin(eq)) // ps
+
+    def _defer_for_leader(self, r: Request) -> bool:
+        """True when admitting ``r`` *now* would recompute a prefix that an
+        in-flight leader is about to commit: some active request shares more
+        whole prompt pages with ``r`` than the index can serve yet, and its
+        commit pointer is still advancing toward them. Deferring the
+        follower one round converts K concurrent prefills of a shared burst
+        prefix into one prefill plus K-1 cache hits. The wait is bounded:
+        the leader either commits the pages (the index match then covers
+        them and the gain vanishes), or stops being eligible (finished /
+        evicted / commit-stalled), or the per-rid round cap fires."""
+        if not self.defer_shared:
+            return False
+        prompt = self._prompts[r.rid]
+        # page-granular cap mirroring admission's match_limit: the last
+        # prompt token is always computed, so pages past it can't be reused.
+        cap = (r.prompt_len - 1) // self.page_size * self.page_size
+        if cap == 0:
+            return False
+        matched_now = self.alloc.match_prefix(prompt,
+                                              max_tokens=r.prompt_len - 1)[1]
+        gain = 0
+        for lead in self._active:
+            if lead.state == ReqState.DECODING:
+                continue    # prompt pages already committed (or stalled)
+            if (lead.rid not in self.alloc.owners
+                    or self.alloc.commit_stalled(lead.rid)):
+                continue
+            lp = self._prompts.get(lead.rid)
+            if lp is None:
+                continue
+            shared = min(self._shared_whole_pages(prompt, lp)
+                         * self.page_size, cap)
+            if (shared > matched_now
+                    and self.alloc.committed_count(lead.rid)
+                    * self.page_size < shared):
+                gain = max(gain, shared - matched_now)
+        if gain >= self.page_size \
+                and self._defer_rounds.get(r.rid, 0) < self._defer_cap:
+            self._defer_rounds[r.rid] = self._defer_rounds.get(r.rid, 0) + 1
+            self.stats.deferred_admissions += 1
+            return True
+        return False
 
     def _admit(self) -> None:
         """Move due arrivals into the admission queue, then admit while the
@@ -547,6 +636,12 @@ class EngineCore:
             failures = 0
             for _ in range(len(self._queued)):
                 r = self._queued.popleft()
+                if paged and self._defer_for_leader(r):
+                    # burst sharing: wait for the in-flight leader's commit
+                    # instead of prefilling the shared prefix again.
+                    self._queued.append(r)
+                    failures += 1
+                    continue
                 if paged:
                     # admission *reserves* the full prompt + decode headroom
                     # so concurrent admits are gated by the same free pool
@@ -566,6 +661,7 @@ class EngineCore:
                     ok = self._assign_slot(r) is not None
                 if ok:
                     self._active.append(r)
+                    self._defer_rounds.pop(r.rid, None)
                     if paged:
                         matched = self.alloc.cached_tokens(r.rid)
                         self._length[r.rid] = matched
@@ -647,6 +743,7 @@ class EngineCore:
             was_first = r.first_token_time is None
             if r.state == ReqState.DECODING:
                 r.emit_token(t_now)
+                self.stats.decode_tokens += 1
                 emitted = True
             else:
                 r.advance_prefill(n)

@@ -99,6 +99,15 @@ class StreamHandle:
     def cancel(self) -> None:
         self._server.cancel(self.rid)
 
+    def poll(self) -> List[int]:
+        """Non-blocking drain of tokens already routed to this handle — no
+        engine pumping, no waiting (the HTTP transport and the router pump
+        the engine from one place and poll handles from another)."""
+        out: List[int] = []
+        while self._buf:
+            out.append(self._buf.popleft())
+        return out
+
     def tokens(self, max_wall_s: float = 600.0) -> Iterator[int]:
         """Yield output token ids as they stream in, pumping the engine while
         waiting. Returns when the request finishes (length / stop / cancel);
@@ -157,6 +166,19 @@ class InferenceServer:
         self.handles: Dict[int, StreamHandle] = {}
         self.events: List[EngineEvent] = []    # full event log (diagnostics)
         self._next_rid = 0
+        self._subscribers: List = []           # event taps (HTTP transport)
+        self._draining = False                 # close() in progress/complete
+        self._close_report: Optional[Dict] = None
+
+    def subscribe(self, fn) -> None:
+        """Register an event tap: ``fn(event)`` is called for every routed
+        :class:`EngineEvent`, in order, from whichever thread pumps the
+        server. The HTTP transport uses this to feed per-request SSE queues
+        without polling handles."""
+        self._subscribers.append(fn)
+
+    def has_work(self) -> bool:
+        return self.core.has_work()
 
     @classmethod
     def build(cls, cfg, scheduler=None, slo_classes=None, **engine_kw
@@ -170,13 +192,17 @@ class InferenceServer:
     # ---- submission ----------------------------------------------------------
     def submit(self, prompt: Sequence[int], slo_class: str = "standard",
                max_output: int = 64, eos_id: Optional[int] = None,
-               stop_ids: Tuple[int, ...] = ()) -> StreamHandle:
+               stop_ids: Tuple[int, ...] = (),
+               rid: Optional[int] = None) -> StreamHandle:
         """Submit a prompt under a named SLO class; returns its stream handle.
         The request arrives *now* on the engine clock — deadlines run from
-        this call."""
+        this call. ``rid`` pins an externally assigned request id (the
+        multi-replica router owns the global id space); default is the
+        server's own counter."""
         cls = self.slo_classes[slo_class]
         prompt = np.asarray(prompt, np.int32)
-        req = Request(rid=self._alloc_rid(), arrival=self.core.now(),
+        req = Request(rid=self._alloc_rid() if rid is None else rid,
+                      arrival=self.core.now(),
                       prompt_len=len(prompt), max_output=max_output,
                       ttft_slo=cls.ttft_slo, tbt_slo=cls.tbt_slo,
                       slo_class=cls.name, eos_id=eos_id,
@@ -191,6 +217,9 @@ class InferenceServer:
         submission delay counts as queueing time exactly as ``serve()``
         measures it; a future arrival is clamped to now (the streaming API
         has no scheduled future — submit when the request exists)."""
+        if self._draining:
+            raise RuntimeError("InferenceServer is draining/closed: "
+                               "no new admissions")
         req.arrival = min(req.arrival, self.core.now())
         self._next_rid = max(self._next_rid, req.rid + 1)
         handle = StreamHandle(self, req)
@@ -230,6 +259,8 @@ class InferenceServer:
             h = self.handles.get(ev.rid)
             if h is not None:
                 h._on_event(ev)
+            for fn in self._subscribers:
+                fn(ev)
 
     def _idle_wait(self) -> None:
         """Pacing between unproductive rounds, mirroring serve(): wait for
@@ -265,6 +296,54 @@ class InferenceServer:
         self._route(self.core.flush())
         return self.events[n0:]
 
+    # ---- graceful shutdown ---------------------------------------------------
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def close(self, drain_s: float = 30.0) -> Dict:
+        """Graceful shutdown: stop admitting, drain in-flight requests to
+        completion (or the ``drain_s`` deadline), then abort stragglers —
+        with KV pages / slots verifiably reclaimed either way. Idempotent;
+        returns ``{"drained", "finished", "aborted"}``. After close, every
+        handle is settled (finished or aborted) and ``submit`` raises."""
+        if self._close_report is not None:
+            return self._close_report
+        self._draining = True
+        t_end = time.perf_counter() + max(drain_s, 0.0)
+        stall = 0
+        while self.core.has_work() and time.perf_counter() < t_end:
+            self.step()
+            if self.core.progress == "executed":
+                stall = 0
+                continue
+            stall = stall + 1 if self.core.stalled() else 0
+            if stall >= 8:
+                break               # wedged: fall through to the abort sweep
+            self._idle_wait()
+        self._route(self.core.flush())
+        stragglers = [rid for rid, h in self.handles.items()
+                      if not h.finished]
+        for rid in stragglers:
+            self.cancel(rid)
+        # every page/slot must be back in the pool — a leak here would stay
+        # invisible until the *next* deployment's admissions start failing.
+        core = self.core
+        if core.cache_mode == "paged":
+            assert core.alloc.free_blocks == core.alloc.num_blocks, \
+                "close(): KV pages leaked past drain+abort"
+            core.alloc.check_invariants()
+        else:
+            assert len(core.free_slots) == core.max_slots, \
+                "close(): slots leaked past drain+abort"
+        self._close_report = {
+            "drained": not stragglers,
+            "finished": sum(1 for h in self.handles.values()
+                            if h.finished and not h.aborted),
+            "aborted": len(stragglers),
+        }
+        return self._close_report
+
     # ---- reporting -----------------------------------------------------------
     def summary(self) -> Dict:
         from repro.serving.metrics import summarize_by_class
@@ -277,4 +356,20 @@ class InferenceServer:
             "violations": sum(r.violations()["violated"] for r in fin),
             "per_class": summarize_by_class(reqs, max(self.core.now(), 1e-9)),
             "stats": self.core.stats,
+        }
+
+    def stats_snapshot(self) -> Dict:
+        """JSON-able operational snapshot (the HTTP ``GET /v1/stats`` body):
+        EngineStats counters, prefix-cache accounting, per-class metrics and
+        live queue/outstanding-work gauges."""
+        core = self.core
+        summ = self.summary()
+        return {
+            "engine": dataclasses.asdict(summ.pop("stats")),
+            "cache_info": core.cache_info(),
+            "sharding": core.shard_info(),
+            "queue_depth": core.queue_depth,
+            "outstanding_tokens": core.outstanding_tokens(),
+            "draining": self._draining,
+            **summ,
         }

@@ -190,6 +190,61 @@ def make_shared_prefix_workload(n: int, vocab_size: int, *,
     return reqs, prompts
 
 
+def make_router_workload(vocab_size: int, *, n_shared: int = 10,
+                         system_len: int = 96, unique_len: int = 24,
+                         shared_output: int = 6, n_batch: int = 4,
+                         batch_prompt: int = 120, batch_output: int = 12,
+                         heavy_prompt: int = 400, heavy_output: int = 48,
+                         gap_s: float = 0.2, seed: int = 0
+                         ) -> Tuple[List[Request], Dict[int, np.ndarray]]:
+    """The multi-replica routing scenario: a **shared-prefix interactive
+    stream** riding next to **background batch work**, shaped so the two
+    routing policies separate.
+
+    One heavy batch request arrives first (token mass a count-based router
+    cannot compensate for), then ``n_shared`` interactive requests sharing a
+    ``system_len``-token prefix arrive at ``gap_s`` spacing (the spacing
+    lets the first one commit its pages before the rest route, so the
+    directory steers the whole stream to one replica where all but the
+    first prefill only their suffix), then ``n_batch`` medium batch
+    requests arrive last — free mass a load-aware router places opposite
+    the heavy request. Round-robin spreads the shared prefix across
+    replicas (each pays its own cold prefill) and stacks the heavy request
+    with half the stream regardless of cost; prefix-affine concentrates
+    the (cheap, cached) stream on one replica and levels the rest by
+    measured load — which is exactly the computed-token imbalance gap
+    ``bench_goodput --replicas`` measures. Returns ``(requests, prompts)``."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, vocab_size, system_len).astype(np.int32)
+    reqs: List[Request] = []
+    prompts: Dict[int, np.ndarray] = {}
+    rid = 0
+
+    def add(prompt: np.ndarray, arrival: float, max_output: int,
+            slo_class: str) -> None:
+        nonlocal rid
+        prompts[rid] = prompt
+        reqs.append(Request(rid=rid, arrival=arrival,
+                            prompt_len=len(prompt), max_output=max_output,
+                            ttft_slo=60.0, tbt_slo=60.0,
+                            slo_class=slo_class))
+        rid += 1
+
+    add(rng.integers(1, vocab_size, heavy_prompt).astype(np.int32),
+        0.0, heavy_output, "batch")
+    t = gap_s
+    for _ in range(n_shared):
+        suffix = rng.integers(1, vocab_size, unique_len).astype(np.int32)
+        add(np.concatenate([system, suffix]), t, shared_output,
+            "interactive")
+        t += gap_s
+    for _ in range(n_batch):
+        add(rng.integers(1, vocab_size, batch_prompt).astype(np.int32),
+            t, batch_output, "batch")
+        t += gap_s
+    return reqs, prompts
+
+
 def multiturn_followup(prompt: np.ndarray, output_ids: Sequence[int],
                        rng: np.random.Generator, vocab_size: int,
                        turn_len: int = 24) -> np.ndarray:
@@ -275,4 +330,50 @@ def run_open_loop(server, requests: Sequence[Request],
         "unfinished": [h for h in handles.values() if not h.finished],
         "wall": server.core.now() - t0,
         "events": server.events[n_ev0:],
+    }
+
+
+def run_open_loop_http(client, requests: Sequence[Request],
+                       prompts: Dict[int, np.ndarray],
+                       max_wall_s: float = 300.0) -> Dict:
+    """Open-loop replay against a **network** front door: each request is
+    POSTed to ``/v1/generate`` at its wall-clock arrival offset and its SSE
+    stream is consumed on a reader thread (the blocking client needs one
+    reader per in-flight stream; the server itself stays single-threaded).
+
+    The HTTP counterpart of :func:`run_open_loop` — the engine runs in the
+    server process, so this driver only paces arrivals and collects tokens.
+    ``client`` is a ``repro.frontend.client.EngineHttpClient``. Returns
+    ``{"handles", "finished", "unfinished", "wall"}`` keyed by *workload*
+    rid (the server assigns its own rids; ``handle.rid`` has the remote
+    one)."""
+    import threading
+
+    order = sorted(requests, key=lambda r: r.arrival)
+    t0 = time.perf_counter()
+    t_end = t0 + max_wall_s
+    handles: Dict[int, object] = {}
+    readers: List[threading.Thread] = []
+    for r in order:
+        wait = r.arrival - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(min(wait, max(t_end - time.perf_counter(), 0.0)))
+        if time.perf_counter() >= t_end:
+            break
+        h = client.generate(prompts[r.rid].tolist(),
+                            slo_class=r.slo_class, max_output=r.max_output,
+                            eos_id=r.eos_id, stop_ids=r.stop_ids)
+        handles[r.rid] = h
+        th = threading.Thread(target=h.result, daemon=True)
+        th.start()
+        readers.append(th)
+    for th in readers:
+        th.join(timeout=max(t_end - time.perf_counter(), 0.0))
+    finished = [h for h in handles.values()
+                if h.finished and not h.aborted]
+    return {
+        "handles": handles,
+        "finished": finished,
+        "unfinished": [h for h in handles.values() if not h.finished],
+        "wall": time.perf_counter() - t0,
     }
