@@ -1,15 +1,23 @@
 """Kernel micro-benchmarks: interpret-mode correctness timing + model-layer
 throughput of the jnp paths on CPU (the TPU perf path is the Pallas kernel;
-this prints ref-vs-kernel agreement and per-call walltime for the record)."""
+this prints ref-vs-kernel agreement and per-call walltime for the record).
+
+``--dma-overlap`` adds the fused-layout microbench: the double-buffered
+decode/prefill kernels run in interpret mode against their oracles, the
+partial-softmax recombine is asserted bit-exact against the full kernel, and
+single-scatter vs split-scatter KV writes are timed. Results land in
+``BENCH_microkernels.json`` (section ``dma_overlap``) next to the roofline
+layout A/B numbers."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 
 
 def _time(f, *args, reps=3):
@@ -23,7 +31,96 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def dma_overlap_bench() -> None:
+    """Fused-layout / double-buffered-DMA microbench (interpret-mode smoke on
+    CPU: correctness + shape/recombine assertions; walltime is recorded for
+    the artifact but only meaningful on TPU where the ping-pong DMA actually
+    overlaps compute)."""
+    from repro.kernels.paged_attention.kernel import (paged_attention,
+                                                      paged_attention_fused)
+    from repro.kernels.paged_attention.ref import paged_attention_fused_ref
+    from repro.kernels.paged_prefill_attention.kernel import (
+        paged_prefill_attention_fused)
+    from repro.kernels.paged_prefill_attention.ref import (
+        paged_prefill_attention_fused_ref)
+    from repro.kernels.ref_common import finalize_partials
+
+    rng = np.random.default_rng(11)
+    out = {"backend": jax.default_backend()}
+    B, Hkv, G, D, ps, P, n = 4, 4, 2, 64, 16, 32, 8
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    kvp = jnp.stack([kp, vp], axis=2)
+    bt = jnp.asarray(rng.integers(0, P, (B, n)), jnp.int32)
+    ln = jnp.asarray([n * ps, ps, ps - 3, 77], jnp.int32)
+
+    # decode: legacy grid-pipelined kernel vs fused double-buffered kernel
+    t_old = _time(lambda: paged_attention(q, kp, vp, bt, ln, scale=0.125,
+                                          interpret=True))
+    t_new = _time(lambda: paged_attention_fused(q, kvp, bt, ln, scale=0.125,
+                                                interpret=True))
+    full = paged_attention_fused(q, kvp, bt, ln, scale=0.125, interpret=True)
+    ref = paged_attention_fused_ref(q, kvp, bt, ln, scale=0.125)
+    err = float(jnp.max(jnp.abs(full - ref)))
+    assert full.shape == (B, Hkv * G, D), full.shape
+    assert err < 2e-5, err
+    # partial-softmax recombine must be bit-exact vs the full kernel
+    acc, m, l = paged_attention_fused(q, kvp, bt, ln, scale=0.125,
+                                      partial=True, interpret=True)
+    assert acc.shape == (B, Hkv * G, D) and m.shape == l.shape == (B, Hkv * G)
+    assert np.array_equal(np.asarray(finalize_partials(acc, l, q.dtype)),
+                          np.asarray(full)), "partial recombine not bit-exact"
+    out["decode"] = {"us_old_split": t_old, "us_fused_dma": t_new,
+                     "max_err_vs_ref": err, "partial_recombine_bit_exact": True}
+    emit("kernel/paged_attention_fused/us_per_call", f"{t_new:.0f}",
+         f"split-legacy {t_old:.0f}us interpret")
+
+    # ragged prefill: fused double-buffered kernel vs oracle
+    R, Sq = 3, 32
+    qp = jnp.asarray(rng.normal(size=(R, Sq, Hkv, G, D)), jnp.float32)
+    btp = jnp.asarray(rng.integers(0, P, (R, n)), jnp.int32)
+    rp = jnp.asarray([0, ps, n * ps - Sq], jnp.int32)
+    lnp_ = rp + jnp.asarray([Sq, Sq - 5, Sq], jnp.int32)
+    t_pref = _time(lambda: paged_prefill_attention_fused(
+        qp, kvp, btp, rp, lnp_, scale=0.125, block_q=16, interpret=True))
+    outp = paged_prefill_attention_fused(qp, kvp, btp, rp, lnp_, scale=0.125,
+                                         block_q=16, interpret=True)
+    refp = paged_prefill_attention_fused_ref(qp, kvp, btp, rp, lnp_,
+                                             scale=0.125)
+    q_pos = np.asarray(rp)[:, None] + np.arange(Sq)[None, :]
+    valid = q_pos < np.asarray(lnp_)[:, None]
+    errp = float(np.max(np.abs(np.asarray(outp)[valid]
+                               - np.asarray(refp)[valid])))
+    assert outp.shape == qp.shape, outp.shape
+    assert errp < 2e-5, errp
+    out["prefill"] = {"us_fused_dma": t_pref, "max_err_vs_ref": errp}
+    emit("kernel/paged_prefill_attention_fused/us_per_call", f"{t_pref:.0f}",
+         "interpret")
+
+    # KV write: one fused scatter vs two split scatters (real CPU win too)
+    from repro.models.attention import write_pages, write_pages_fused
+    T = 256
+    k_new = jnp.asarray(rng.normal(size=(1, T, Hkv, D)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(1, T, Hkv, D)), jnp.float32)
+    slots = jnp.asarray(rng.choice(P * ps, size=T, replace=False), jnp.int32)
+    f_split = jax.jit(lambda: (write_pages(kp, k_new, slots),
+                               write_pages(vp, v_new, slots)))
+    f_fused = jax.jit(lambda: write_pages_fused(kvp, k_new, v_new, slots))
+    t_split, t_fused = _time(f_split), _time(f_fused)
+    out["kv_write"] = {"us_split_two_scatters": t_split,
+                       "us_fused_one_scatter": t_fused}
+    emit("kernel/write_pages_fused/us_per_call", f"{t_fused:.0f}",
+         f"split {t_split:.0f}us jit")
+    write_bench_json("dma_overlap", out)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dma-overlap", action="store_true",
+                    help="run the fused-layout/double-buffered-DMA microbench "
+                         "and write BENCH_microkernels.json")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
 
     # chunked prefill attention: jnp blockwise path (the serving hot loop)
@@ -73,6 +170,9 @@ def main() -> None:
     out_r = mlstm_ref(qm, km, qm, li, lf)
     emit("kernel/mlstm_chunkwise/max_err", f"{float(jnp.max(jnp.abs(out_k - out_r))):.2e}",
          "interpret vs ref")
+
+    if args.dma_overlap:
+        dma_overlap_bench()
 
 
 if __name__ == "__main__":

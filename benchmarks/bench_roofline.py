@@ -4,13 +4,19 @@ Reads the probe JSONL produced by the dry-run roofline pass (two-point layer
 extrapolation, see `repro/analysis/extrapolate.py`), computes the three
 roofline terms per (arch x shape) on the single-pod mesh, and emits both CSV
 rows and the EXPERIMENTS.md markdown table.
+
+Also measures per-round paged-attention time for the old split KV layout vs
+the fused head-interleaved layout at three decode batch shapes (KV write +
+attention, the whole per-layer round contribution) and records the A/B into
+``BENCH_microkernels.json`` — the layout win is measured, not asserted.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops_estimate
 from repro.configs import get_config
 from repro.configs.base import SHAPES
@@ -70,7 +76,71 @@ def markdown_table(rows) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+# decode batch shapes for the layout A/B: (batch, pages_per_seq) — a light
+# interactive round, a steady mixed round, and a saturated decode round.
+AB_SHAPES = [(8, 8), (32, 16), (128, 16)]
+
+
+def attention_layout_ab() -> None:
+    """Per-round attention time, old split pools vs fused head-interleaved
+    pool, at three decode batch shapes. One 'round' = scatter the new KV
+    (write_pages x2 vs write_pages_fused x1) + attend over the block tables
+    (the split-pool oracle vs the fused dispatch `paged_attention_auto`
+    takes — the Pallas kernels on TPU, the jnp oracles on CPU)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.paged_attention.ops import paged_attention_auto
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    from repro.models.attention import write_pages, write_pages_fused
+
+    rng = np.random.default_rng(5)
+    Hkv, G, D, ps = 4, 2, 64, 16
+    section = {"backend": jax.default_backend(),
+               "shape_fields": "(batch, pages_per_seq)"}
+    for B, n in AB_SHAPES:
+        P = max(B * n // 2, n + 1)          # half-utilized shared pool
+        kp = jnp.asarray(rng.normal(size=(Hkv, P, ps, D)), jnp.bfloat16)
+        vp = jnp.asarray(rng.normal(size=(Hkv, P, ps, D)), jnp.bfloat16)
+        kvp = jnp.stack([kp, vp], axis=2)
+        bt = jnp.asarray(rng.integers(0, P, (B, n)), jnp.int32)
+        ln = jnp.asarray(rng.integers(ps, n * ps + 1, (B,)), jnp.int32)
+        q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.bfloat16)
+        k_new = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.bfloat16)
+        v_new = jnp.asarray(rng.normal(size=(B, 1, Hkv, D)), jnp.bfloat16)
+        slots = jnp.asarray(rng.choice(P * ps, size=B, replace=False),
+                            jnp.int32)
+
+        def round_split():
+            kp2 = write_pages(kp, k_new, slots)
+            vp2 = write_pages(vp, v_new, slots)
+            return paged_attention_ref(q, kp2, vp2, bt, ln, scale=D ** -0.5)
+
+        def round_fused():
+            kvp2 = write_pages_fused(kvp, k_new, v_new, slots)
+            return paged_attention_auto(q, kvp2, bt, ln, scale=D ** -0.5)
+
+        f_a, f_b = jax.jit(round_split), jax.jit(round_fused)
+
+        def t(f, reps=10):
+            jax.block_until_ready(f())
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = f()
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / reps * 1e6
+
+        us_a, us_b = t(f_a), t(f_b)
+        section[f"B{B}_n{n}"] = {"us_round_split": us_a,
+                                 "us_round_fused": us_b,
+                                 "speedup": us_a / us_b if us_b else 0.0}
+        emit(f"roofline/attention_ab/B{B}_n{n}",
+             f"{us_b:.0f}us fused", f"split {us_a:.0f}us")
+    write_bench_json("layout_ab", section)
+
+
 def main() -> None:
+    attention_layout_ab()
     rows = [term_row(d) for d in load_rows()]
     if not rows:
         emit("roofline/status", "no probe data",

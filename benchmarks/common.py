@@ -1,6 +1,8 @@
-"""Shared benchmark plumbing: scheduler registry, simulation runner, CSV."""
+"""Shared benchmark plumbing: scheduler registry, simulation runner, CSV,
+and the merged BENCH_microkernels.json artifact writer."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Dict, Optional
@@ -46,3 +48,26 @@ def run_sim(sched_name: str, model_name: str, dataset: str, qps: float,
 def emit(name: str, value, derived: str = "") -> None:
     """CSV row: name,value,derived."""
     print(f"{name},{value},{derived}")
+
+
+MICROKERNEL_JSON = os.environ.get("BENCH_MICROKERNELS_JSON",
+                                  "BENCH_microkernels.json")
+
+
+def write_bench_json(section: str, payload: Dict,
+                     path: str = MICROKERNEL_JSON) -> None:
+    """Merge ``payload`` under ``section`` into the shared kernel-bench JSON
+    artifact. Sections are written independently (``--dma-overlap`` and the
+    roofline layout A/B run as separate CI steps) so each rewrite preserves
+    the others' numbers."""
+    data: Dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    emit(f"bench_json/{section}", path, f"{len(payload)} entries")

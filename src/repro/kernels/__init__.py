@@ -10,11 +10,18 @@ Kernels:
 - ``chunked_prefill_attention`` — flash attention of a query chunk against
   cache prefix + itself (the exact shape chunked prefill creates).
 - ``paged_attention`` — decode-time GQA attention over a block-table paged KV
-  cache (scalar-prefetch indexed).
+  cache (scalar-prefetch indexed). ``paged_attention_fused`` is the serving
+  generation: fused head-interleaved pool ``[Hkv, P, 2, ps, D]``, explicit
+  double-buffered HBM→VMEM page DMA, and a ``partial=True`` mode emitting
+  un-normalized flash state for the sequence-sharded mesh combine.
 - ``paged_prefill_attention`` — ragged chunked-prefill attention computed
   *directly* over the paged KV (per-row block tables + offsets as
   scalar-prefetch operands), eliminating the dense page gather the jnp path
-  needs.
+  needs. ``paged_prefill_attention_fused`` mirrors the decode kernel's fused
+  layout / double-buffering / partials, plus per-(row, q-block) page-range
+  pruning for causal and sliding-window masks.
+- ``ref_common`` — the shared jnp oracle math both paged refs wrap (split
+  and fused layouts, full softmax and partials, written once).
 - ``mamba_scan`` — selective-state-space scan, chunked over sequence with a
   VMEM-carried state.
 - ``mlstm_chunkwise`` — xLSTM matrix-memory cell, chunkwise-parallel form.

@@ -1,24 +1,26 @@
 """Jitted public wrapper + sharded dispatch for the paged-attention decode
-kernel.
+kernel, over the fused head-interleaved KV pool ``[Hkv, P, 2, ps, D]``.
 
 ``paged_attention_auto`` is the serving engine's entry point. Single device
-(``mesh=None`` or a 1-wide axis) dispatches exactly as before: the Pallas TPU
-kernel on TPU, the pure-jnp oracle elsewhere. On a mesh it runs under
-``shard_map``:
+(``mesh=None`` or a 1-wide axis) dispatches exactly as before: the fused
+double-buffered Pallas TPU kernel on TPU, the pure-jnp oracle elsewhere. On a
+mesh it runs under ``shard_map``:
 
 * **head-sharded** (KV head count divides the axis): every shard holds a head
-  slice of the physical page pools and runs the unmodified kernel/oracle on
-  its slice — the kernel grid shrinks with the per-shard head count and no
+  slice of the fused page pool and runs the unmodified kernel/oracle on its
+  slice — the kernel grid shrinks with the per-shard head count and no
   collective touches the softmax. The [B, H, D] output is re-replicated with
   one all-gather (pure data movement), so downstream replicated math is
   bit-identical to the single-device program.
 * **sequence-sharded fallback** (heads don't divide — mirroring
   ``launch/sharding.py``'s KV cache rule): pages stay replicated and each
-  shard attends over a column slice of the block tables, combining partial
-  softmax state flash-decode style (global ``pmax`` of row maxima, ``psum``
-  of the normalizer and of the value-weighted partials). This fallback uses
-  the jnp oracle math on every backend; a Pallas partial-softmax kernel is a
-  recorded follow-on.
+  shard attends over a column slice of the block tables with the
+  **partial-softmax kernel** (``paged_attention_fused(partial=True)`` on
+  TPU, its jnp partial oracle on CPU CI boxes), emitting un-normalized flash
+  state ``(acc, m, l)``. The flash-decode combine stays collective-side:
+  global ``pmax`` of the row maxima, ``psum`` of the rescaled normalizer and
+  value partials, one division at the end — the jnp oracle is now only the
+  test reference for this path.
 """
 from __future__ import annotations
 
@@ -28,72 +30,91 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import NEG_INF, paged_attention_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention, paged_attention_fused)
+from repro.kernels.paged_attention.ref import (
+    NEG_INF, paged_attention_fused_ref, paged_attention_partial_ref,
+    paged_attention_ref)
 from repro.kernels.shard_utils import axis_size, head_shards, shard_map
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
                                              "interpret"))
-def paged_attention_op(q, k_pages, v_pages, block_tables, lengths, *, scale,
+def paged_attention_op(q, kv_pages, block_tables, lengths, *, scale,
                        window=0, softcap=0.0, interpret=False):
-    return paged_attention(q, k_pages, v_pages, block_tables, lengths,
-                           scale=scale, window=window, softcap=softcap,
-                           interpret=interpret)
+    return paged_attention_fused(q, kv_pages, block_tables, lengths,
+                                 scale=scale, window=window, softcap=softcap,
+                                 interpret=interpret)
 
 
-def _single_device(q, k_pages, v_pages, block_tables, lengths, *, scale,
+def _single_device(q, kv_pages, block_tables, lengths, *, scale,
                    window, softcap):
-    """Backend dispatch on one shard/device: the Pallas TPU kernel on TPU,
-    the pure-jnp oracle elsewhere (CPU CI boxes). Traceable either way —
-    the choice is made at trace time."""
+    """Backend dispatch on one shard/device: the fused double-buffered Pallas
+    TPU kernel on TPU, the pure-jnp oracle elsewhere (CPU CI boxes).
+    Traceable either way — the choice is made at trace time."""
     if jax.default_backend() == "tpu":
-        return paged_attention(q, k_pages, v_pages, block_tables, lengths,
-                               scale=scale, window=window, softcap=softcap)
-    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
-                               scale=scale, window=window, softcap=softcap)
+        return paged_attention_fused(q, kv_pages, block_tables, lengths,
+                                     scale=scale, window=window,
+                                     softcap=softcap)
+    return paged_attention_fused_ref(q, kv_pages, block_tables, lengths,
+                                     scale=scale, window=window,
+                                     softcap=softcap)
 
 
-def _head_sharded(q, k_pages, v_pages, block_tables, lengths, *, scale,
+def _partials(q, kv_pages, block_tables, lengths, *, scale, window, softcap):
+    """Per-shard un-normalized flash state (acc, m, l): the partial-softmax
+    Pallas kernel on TPU, its jnp partial oracle elsewhere."""
+    if jax.default_backend() == "tpu":
+        return paged_attention_fused(q, kv_pages, block_tables, lengths,
+                                     scale=scale, window=window,
+                                     softcap=softcap, partial=True)
+    return paged_attention_partial_ref(q, kv_pages, block_tables, lengths,
+                                       scale=scale, window=window,
+                                       softcap=softcap)
+
+
+def _head_sharded(q, kv_pages, block_tables, lengths, *, scale,
                   window, softcap, mesh, axis):
     """KV heads shard on ``axis``; q's head dim is kv-major (see ``_qkv``),
     so an equal contiguous H-split keeps every query head on the shard that
     owns its KV head. Each shard runs the unmodified single-device path on
     its slice (per-head math is independent — numerics identical)."""
-    def one_shard(q_, k_, v_, bt_, ln_):
-        return _single_device(q_, k_, v_, bt_, ln_, scale=scale,
+    def one_shard(q_, kv_, bt_, ln_):
+        return _single_device(q_, kv_, bt_, ln_, scale=scale,
                               window=window, softcap=softcap)
 
     fn = shard_map(one_shard, mesh=mesh,
                    in_specs=(P(None, axis, None),
-                             P(axis, None, None, None),
-                             P(axis, None, None, None),
+                             P(axis, None, None, None, None),
                              P(None, None), P(None)),
                    out_specs=P(None, axis, None))
-    out = fn(q, k_pages, v_pages, block_tables, lengths)
+    out = fn(q, kv_pages, block_tables, lengths)
     # re-replicate (one all-gather, no arithmetic): every op downstream of
     # attention then sees the full operand and stays bit-identical to the
     # single-device program.
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
 
 
-def _seq_sharded(q, k_pages, v_pages, block_tables, lengths, *, scale,
+def _seq_sharded(q, kv_pages, block_tables, lengths, *, scale,
                  window, softcap, mesh, axis):
     """Replicated pages, block-table columns sharded: shard i owns logical
-    pages [i*n/m, (i+1)*n/m) of every row and contributes a partial softmax
-    (flash-decode semantics). The math mirrors ``paged_attention_ref`` term
-    for term — only the cross-shard grouping of the sums differs."""
+    pages [i*n/m, (i+1)*n/m) of every row and contributes the un-normalized
+    flash state from the partial-softmax kernel/oracle (both masks depend
+    only on ``length - k_pos``, so shard-local lengths ``len - offset``
+    carry the global semantics). The flash-decode combine — ``pmax`` of the
+    maxima, ``psum`` of the rescaled normalizer and value partials — is the
+    only cross-shard arithmetic."""
     m = axis_size(mesh, axis)
     B, H, D = q.shape
-    ps = k_pages.shape[2]
+    ps = kv_pages.shape[3]
     n = block_tables.shape[1]
     if n % m:
         # pad with page 0: the padded columns sit past every row's valid
-        # length, so the mask below kills them before the softmax. Pin the
-        # concat result replicated — left to GSPMD auto-sharding, the padded
-        # table can pick up a partial sharding whose reshard into the
-        # shard_map in_spec SUMS table entries across the unmentioned mesh
-        # axes (observed on 2x4 CPU meshes: page ids doubled).
+        # length, so the mask kills them before the softmax. Pin the concat
+        # result replicated — left to GSPMD auto-sharding, the padded table
+        # can pick up a partial sharding whose reshard into the shard_map
+        # in_spec SUMS table entries across the unmentioned mesh axes
+        # (observed on 2x4 CPU meshes: page ids doubled).
         pad = m - n % m
         block_tables = jnp.concatenate(
             [block_tables, jnp.zeros((B, pad), block_tables.dtype)], axis=1)
@@ -101,53 +122,36 @@ def _seq_sharded(q, k_pages, v_pages, block_tables, lengths, *, scale,
             block_tables, NamedSharding(mesh, P()))
     n_loc = block_tables.shape[1] // m
 
-    def one_shard(q_, kp, vp, bt_, ln):
+    def one_shard(q_, kvp, bt_, ln):
         i = jax.lax.axis_index(axis)
-        Hkv = kp.shape[0]
-        G = H // Hkv
-        k_seq = kp[:, bt_]                      # [Hkv, B, n_loc, ps, D]
-        v_seq = vp[:, bt_]
-        k_seq = k_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n_loc * ps, D)
-        v_seq = v_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n_loc * ps, D)
-        qg = q_.reshape(B, Hkv, G, D)
-        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_seq,
-                       preferred_element_type=jnp.float32) * scale
-        if softcap > 0.0:
-            s = softcap * jnp.tanh(s / softcap)
-        k_pos = i * (n_loc * ps) + jnp.arange(n_loc * ps)   # global positions
-        mask = k_pos[None, None, None, :] < ln[:, None, None, None]
-        if window > 0:
-            mask &= k_pos[None, None, None, :] >= (ln - window)[:, None, None, None]
-        s = jnp.where(mask, s, NEG_INF)
-        m_loc = jnp.max(s, axis=-1, keepdims=True)
-        m_glob = jax.lax.pmax(m_loc, axis)      # exact: max is associative
-        e = jnp.exp(s - m_glob)
-        den = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), axis)
-        p = (e / den).astype(v_seq.dtype)
-        out = jnp.einsum("bhgk,bhkd->bhgd", p, v_seq,
-                         preferred_element_type=jnp.float32)
-        out = jax.lax.psum(out, axis)
-        return out.reshape(B, H, D).astype(q_.dtype)
+        ln_loc = ln - i * (n_loc * ps)          # shard-local valid lengths
+        acc, mx, l = _partials(q_, kvp, bt_, ln_loc, scale=scale,
+                               window=window, softcap=softcap)
+        m_glob = jax.lax.pmax(mx, axis)         # exact: max is associative
+        c = jnp.exp(mx - m_glob)
+        num = jax.lax.psum(acc * c[..., None], axis)
+        den = jax.lax.psum(l * c, axis)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q_.dtype)
 
     fn = shard_map(one_shard, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(None, axis), P()),
+                   in_specs=(P(), P(), P(None, axis), P()),
                    out_specs=P())
-    return fn(q, k_pages, v_pages, block_tables, lengths)
+    return fn(q, kv_pages, block_tables, lengths)
 
 
-def paged_attention_auto(q, k_pages, v_pages, block_tables, lengths, *, scale,
+def paged_attention_auto(q, kv_pages, block_tables, lengths, *, scale,
                          window=0, softcap=0.0, mesh=None, axis="model"):
     """Mesh-aware dispatch used inside the model's paged-decode forward (see
     module docstring). ``mesh=None`` (or a 1-wide ``axis``) is the exact
     pre-mesh single-device path."""
     m = axis_size(mesh, axis)
     if m <= 1:
-        return _single_device(q, k_pages, v_pages, block_tables, lengths,
+        return _single_device(q, kv_pages, block_tables, lengths,
                               scale=scale, window=window, softcap=softcap)
-    if head_shards(k_pages.shape[0], mesh, axis) > 1:
-        return _head_sharded(q, k_pages, v_pages, block_tables, lengths,
+    if head_shards(kv_pages.shape[0], mesh, axis) > 1:
+        return _head_sharded(q, kv_pages, block_tables, lengths,
                              scale=scale, window=window, softcap=softcap,
                              mesh=mesh, axis=axis)
-    return _seq_sharded(q, k_pages, v_pages, block_tables, lengths,
+    return _seq_sharded(q, kv_pages, block_tables, lengths,
                         scale=scale, window=window, softcap=softcap,
                         mesh=mesh, axis=axis)

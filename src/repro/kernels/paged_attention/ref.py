@@ -1,35 +1,59 @@
-"""Pure-jnp oracle for the paged-attention decode kernel."""
+"""Pure-jnp oracles for the paged-attention decode kernel.
+
+Thin wrappers over :mod:`repro.kernels.ref_common` (the shared gather-pages +
+masked-softmax reference): the split-layout oracle, the fused head-interleaved
+layout oracle, and the partial-softmax oracles the sequence-sharded mesh
+fallback combines across shards. The split oracle's operations are unchanged
+bit-for-bit from the pre-refactor module — engine slot-vs-paged equivalence
+and greedy-token bit-identity ride on that.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels import ref_common as rc
+from repro.kernels.ref_common import NEG_INF  # re-export (legacy import site)
+
+
+def _decode_masked_scores(q, k_pages, block_tables, lengths, *, scale,
+                          window, softcap):
+    k_seq = rc.gather_seq(k_pages, block_tables)
+    s = rc.decode_scores(q, k_seq, scale=scale, softcap=softcap)
+    return rc.decode_mask(s, lengths, window=window,
+                          k_pos=jnp.arange(k_seq.shape[2]))
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
                         scale, window=0, softcap=0.0):
     """q: [B, H, D]; pages: [Hkv, P, ps, D]; block_tables: [B, n]; lengths [B]."""
-    B, H, D = q.shape
-    Hkv, _, ps, _ = k_pages.shape
-    G = H // Hkv
-    n = block_tables.shape[1]
-    # gather each sequence's logical KV [B, Hkv, n*ps, D]
-    k_seq = k_pages[:, block_tables]            # [Hkv, B, n, ps, D]
-    v_seq = v_pages[:, block_tables]
-    k_seq = k_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n * ps, D)
-    v_seq = v_seq.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n * ps, D)
-    qg = q.reshape(B, Hkv, G, D)
-    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_seq,
-                   preferred_element_type=jnp.float32) * scale
-    if softcap > 0.0:
-        s = softcap * jnp.tanh(s / softcap)
-    k_pos = jnp.arange(n * ps)
-    mask = k_pos[None, None, None, :] < lengths[:, None, None, None]
-    if window > 0:
-        mask &= k_pos[None, None, None, :] >= (lengths - window)[:, None, None, None]
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_seq.dtype), v_seq,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(B, H, D).astype(q.dtype)
+    s = _decode_masked_scores(q, k_pages, block_tables, lengths, scale=scale,
+                              window=window, softcap=softcap)
+    v_seq = rc.gather_seq(v_pages, block_tables)
+    return rc.decode_softmax_v(s, v_seq, q.dtype)
+
+
+def paged_attention_fused_ref(q, kv_pages, block_tables, lengths, *,
+                              scale, window=0, softcap=0.0):
+    """Fused head-interleaved layout: kv_pages [Hkv, P, 2, ps, D] with K at
+    interleave 0, V at 1. Same math as the split oracle — the layout only
+    moves bytes, so outputs are bit-identical to ``paged_attention_ref`` on
+    the equivalent split pools."""
+    k_pages, v_pages = rc.split_fused(kv_pages)
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               scale=scale, window=window, softcap=softcap)
+
+
+def paged_attention_partial_ref(q, kv_pages, block_tables, lengths, *,
+                                scale, window=0, softcap=0.0):
+    """Partial-softmax oracle over the fused layout: returns the
+    un-normalized flash state ``(acc [B,H,D] f32, m [B,H] f32, l [B,H] f32)``.
+    ``lengths`` may be shard-local (global length minus the shard's key
+    offset) — both masks depend only on ``length - k_pos``, so the
+    sequence-sharded fallback passes local lengths and global semantics fall
+    out. ``rc.finalize_partials(acc, l, q.dtype)`` equals the full oracle up
+    to the flash regrouping of the exp sums."""
+    k_pages, v_pages = rc.split_fused(kv_pages)
+    s = _decode_masked_scores(q, k_pages, block_tables, lengths, scale=scale,
+                              window=window, softcap=softcap)
+    v_seq = rc.gather_seq(v_pages, block_tables)
+    return rc.decode_partials(s, v_seq)

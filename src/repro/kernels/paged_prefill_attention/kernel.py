@@ -1,4 +1,4 @@
-"""Paged-prefill (ragged chunked-prefill) attention Pallas TPU kernel.
+"""Paged-prefill (ragged chunked-prefill) attention Pallas TPU kernels.
 
 Each batch row is a *chunk* of a different request's prompt, sitting at its
 own cache offset ``row_pos[r]``, attending over that request's paged KV
@@ -7,6 +7,21 @@ table). This is the fused ragged mixed-batch shape the serving engine's
 scheduler emits; computing it directly over the block tables removes the
 dense ``gather_pages`` materialization (O(R*S*H*D) HBM traffic per layer)
 and the [R, H, G, Sq, Sk] score tensor of the jnp path.
+
+Two generations live here (mirroring ``paged_attention/kernel.py``):
+
+* ``paged_prefill_attention`` — the original split-layout kernel (separate
+  K/V pools, page axis in the grid, DMA left to the implicit Pallas grid
+  pipeline). Kept as the layout/DMA A/B baseline for ``bench_microkernels``.
+* ``paged_prefill_attention_fused`` — the production kernel over the fused
+  head-interleaved pool ``[Hkv, P, 2, page_size, D]``: the pool stays in HBM
+  (``ANY`` memory space), the page axis is an in-kernel loop bounded by the
+  causal/window/length page range (pruned pages cost neither FLOPs *nor*
+  DMA), and page copies ping-pong through a 2-deep VMEM scratch so the
+  HBM→VMEM copy of page ``i+1`` overlaps the compute of page ``i`` — one
+  DMA moving K and V together. ``partial=True`` emits the un-normalized
+  flash state ``(acc, m, l)`` for the sequence-sharded mesh fallback;
+  finalizing it reproduces ``partial=False`` bit-exactly.
 
 TPU adaptation (vs. the CUDA chunked-prefill kernels vLLM drives):
 
@@ -151,3 +166,188 @@ def paged_prefill_attention(
     )(block_tables.astype(jnp.int32), row_pos.astype(jnp.int32),
       lengths.astype(jnp.int32), qf, k_pages, v_pages)
     return out.reshape(R, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)
+
+
+# =============================================================================
+# fused head-interleaved layout + explicit double-buffered page DMA
+# =============================================================================
+K_IDX, V_IDX = 0, 1   # interleave positions inside a fused page
+
+
+def _fused_kernel(bt_ref, pos_ref, len_ref,   # scalar prefetch [R,n],[R],[R]
+                  q_ref, kv_hbm,              # [1,1,bq*G,D], [Hkv,P,2,ps,D]
+                  *refs,                      # outputs, then (scratch, sem)
+                  scale: float, window: int, softcap: float,
+                  page_size: int, num_pages: int, block_q: int, group: int,
+                  partial: bool):
+    if partial:
+        o_ref, m_out, l_out = refs[0], refs[1], refs[2]
+        scratch, sem = refs[3], refs[4]
+    else:
+        o_ref, m_out, l_out = refs[0], None, None
+        scratch, sem = refs[1], refs[2]
+    r = pl.program_id(0)
+    h = pl.program_id(1)
+    qi = pl.program_id(2)
+    BG, D = q_ref.shape[2], q_ref.shape[3]
+
+    length = len_ref[r]
+    pos = pos_ref[r]
+    # live page range for this q tile: pages past ceil(len/ps), entirely
+    # above the causal diagonal, or entirely below the sliding window are
+    # never copied in at all (the grid-pipelined kernel only skipped their
+    # FLOPs). ``pos``/``length`` may be shard-local (and negative): floor
+    # division keeps the bounds exact either way.
+    pages_needed = (length + page_size - 1) // page_size
+    causal_hi = (pos + (qi + 1) * block_q - 1) // page_size + 1
+    j_hi = jnp.minimum(jnp.minimum(pages_needed, causal_hi), num_pages)
+    if window > 0:
+        j_lo = jnp.maximum(
+            (pos + qi * block_q - window + 1) // page_size, 0)
+    else:
+        j_lo = jnp.zeros_like(j_hi)
+    j_lo = jnp.minimum(j_lo, jnp.maximum(j_hi, 0))
+
+    def dma(slot, j):
+        # one async copy moves the page's K and V planes together.
+        return pltpu.make_async_copy(
+            kv_hbm.at[h, bt_ref[r, j]], scratch.at[slot], sem.at[slot])
+
+    @pl.when(j_lo < j_hi)
+    def _warmup():
+        dma(jax.lax.rem(j_lo, 2), j_lo).start()
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        slot = jax.lax.rem(j, 2)
+        # overlap: start page j+1's copy into the other buffer, then block
+        # on page j and compute while j+1 flies.
+        @pl.when(j + 1 < j_hi)
+        def _prefetch_next():
+            dma(jax.lax.rem(j + 1, 2), j + 1).start()
+        dma(slot, j).wait()
+        k = scratch[slot, K_IDX]                         # [ps, D]
+        v = scratch[slot, V_IDX]
+        q = q_ref[0, 0]                                  # [bq*G, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq*G, ps]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        q_pos = pos + qi * block_q + t
+        k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (k_pos <= q_pos) & (k_pos < length)
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(
+        j_lo, j_hi, body,
+        (jnp.full((BG,), NEG_INF, jnp.float32), jnp.zeros((BG,), jnp.float32),
+         jnp.zeros((BG, D), jnp.float32)))
+    if partial:
+        o_ref[0, 0] = acc
+        m_out[0, 0] = m
+        l_out[0, 0] = l
+    else:
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_fused(
+    q: jnp.ndarray,             # [R, Sq, Hkv, G, D] chunk queries
+    kv_pages: jnp.ndarray,      # [Hkv, P_total, 2, page_size, D]
+    block_tables: jnp.ndarray,  # [R, num_pages] int32
+    row_pos: jnp.ndarray,       # [R] int32 cache offset per row
+    lengths: jnp.ndarray,       # [R] int32 post-chunk valid length per row
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    partial: bool = False,
+    interpret: bool = False,
+):
+    """Fused-layout ragged chunked prefill with double-buffered page DMA.
+
+    ``partial=False`` returns ``[R, Sq, Hkv, G, D]`` (the oracle's contract).
+    ``partial=True`` returns the un-normalized flash state
+    ``(acc [R,Sq,Hkv,G,D] f32, m [R,Sq,Hkv,G] f32, l [R,Sq,Hkv,G] f32)``;
+    ``row_pos``/``lengths`` may then be shard-local (global minus the
+    shard's key offset) — every mask depends only on position differences.
+    Finalizing the partials matches ``partial=False`` bit-exactly.
+    """
+    R, Sq, Hkv, G, D = q.shape
+    _, _, two, page_size, _ = kv_pages.shape
+    assert two == 2, kv_pages.shape
+    num_pages = block_tables.shape[1]
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq = Sq // block_q
+
+    # [R, Hkv, Sq*G, D]: token t's G grouped heads are rows [t*G, (t+1)*G)
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(R, Hkv, Sq * G, D)
+
+    kernel = functools.partial(
+        _fused_kernel, scale=scale, window=window, softcap=softcap,
+        page_size=page_size, num_pages=num_pages, block_q=block_q, group=G,
+        partial=partial)
+
+    if partial:
+        out_shape = (
+            jax.ShapeDtypeStruct((R, Hkv, Sq * G, D), jnp.float32),
+            jax.ShapeDtypeStruct((R, Hkv, Sq * G), jnp.float32),
+            jax.ShapeDtypeStruct((R, Hkv, Sq * G), jnp.float32))
+        out_specs = (
+            pl.BlockSpec((1, 1, block_q * G, D),
+                         lambda r, h, i, bt, pos, L: (r, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q * G),
+                         lambda r, h, i, bt, pos, L: (r, h, i)),
+            pl.BlockSpec((1, 1, block_q * G),
+                         lambda r, h, i, bt, pos, L: (r, h, i)),
+        )
+    else:
+        out_shape = jax.ShapeDtypeStruct((R, Hkv, Sq * G, D), q.dtype)
+        out_specs = pl.BlockSpec((1, 1, block_q * G, D),
+                                 lambda r, h, i, bt, pos, L: (r, h, i, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(R, Hkv, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q * G, D),
+                         lambda r, h, i, bt, pos, L: (r, h, i, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((2, 2, page_size, D), kv_pages.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), row_pos.astype(jnp.int32),
+      lengths.astype(jnp.int32), qf, kv_pages)
+
+    def _rows(x):   # [R, Hkv, Sq*G, ...] -> [R, Sq, Hkv, G, ...]
+        shp = (R, Hkv, Sq, G) + x.shape[3:]
+        order = (0, 2, 1, 3) + tuple(range(4, len(shp)))
+        return x.reshape(shp).transpose(order)
+
+    if partial:
+        acc, m, l = out
+        return _rows(acc), _rows(m), _rows(l)
+    return _rows(out)

@@ -1,13 +1,15 @@
 """Jitted public wrapper + sharded dispatch for the paged-prefill attention
-kernel.
+kernel, over the fused head-interleaved KV pool ``[Hkv, P, 2, ps, D]``.
 
 ``paged_prefill_attention_auto`` mirrors the decode op's mesh dispatch (see
-``kernels/paged_attention/ops.py``): single device exactly as before;
+``kernels/paged_attention/ops.py``): single device exactly as before (the
+fused double-buffered Pallas kernel on TPU, the jnp oracle on CPU);
 head-sharded ``shard_map`` when the KV head count divides the mesh axis (each
 shard runs the unmodified kernel/oracle on its head slice, grid shrinking
 with the slice); otherwise the sequence-sharded fallback — replicated pages,
-block-table columns sharded, partial softmax combined flash-style with
-``pmax``/``psum`` — using the jnp oracle math on every backend.
+block-table columns sharded, each shard contributing un-normalized flash
+state from the **partial-softmax kernel** (``partial=True`` on TPU, the jnp
+partial oracle on CPU), combined flash-style with ``pmax``/``psum``.
 """
 from __future__ import annotations
 
@@ -17,66 +19,83 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.kernels.paged_prefill_attention.kernel import paged_prefill_attention
+from repro.kernels.paged_prefill_attention.kernel import (
+    paged_prefill_attention, paged_prefill_attention_fused)
 from repro.kernels.paged_prefill_attention.ref import (
-    NEG_INF, paged_prefill_attention_ref)
+    NEG_INF, paged_prefill_attention_fused_ref,
+    paged_prefill_attention_partial_ref, paged_prefill_attention_ref)
 from repro.kernels.shard_utils import axis_size, head_shards, shard_map
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
                                              "block_q", "interpret"))
-def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, row_pos,
+def paged_prefill_attention_op(q, kv_pages, block_tables, row_pos,
                                lengths, *, scale, window=0, softcap=0.0,
                                block_q=128, interpret=False):
-    return paged_prefill_attention(q, k_pages, v_pages, block_tables, row_pos,
-                                   lengths, scale=scale, window=window,
-                                   softcap=softcap, block_q=block_q,
-                                   interpret=interpret)
+    return paged_prefill_attention_fused(
+        q, kv_pages, block_tables, row_pos, lengths, scale=scale,
+        window=window, softcap=softcap, block_q=block_q, interpret=interpret)
 
 
-def _single_device(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+def _single_device(q, kv_pages, block_tables, row_pos, lengths, *,
                    scale, window, softcap):
-    """Backend dispatch on one shard/device: the Pallas TPU kernel on TPU
-    (streams K/V pages once, no gathered k_all/v_all and no dense
-    [R,H,G,Sq,Sk] score tensor), the pure-jnp oracle elsewhere (CPU CI
-    boxes). Traceable either way — the choice is made at trace time."""
+    """Backend dispatch on one shard/device: the fused double-buffered
+    Pallas TPU kernel on TPU (streams each K/V page once with one DMA, no
+    gathered k_all/v_all and no dense [R,H,G,Sq,Sk] score tensor), the
+    pure-jnp oracle elsewhere (CPU CI boxes). Traceable either way — the
+    choice is made at trace time."""
     if jax.default_backend() == "tpu":
-        return paged_prefill_attention(q, k_pages, v_pages, block_tables,
-                                       row_pos, lengths, scale=scale,
-                                       window=window, softcap=softcap)
-    return paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
-                                       row_pos, lengths, scale=scale,
-                                       window=window, softcap=softcap)
+        return paged_prefill_attention_fused(q, kv_pages, block_tables,
+                                             row_pos, lengths, scale=scale,
+                                             window=window, softcap=softcap)
+    return paged_prefill_attention_fused_ref(q, kv_pages, block_tables,
+                                             row_pos, lengths, scale=scale,
+                                             window=window, softcap=softcap)
 
 
-def _head_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+def _partials(q, kv_pages, block_tables, row_pos, lengths, *, scale, window,
+              softcap):
+    """Per-shard un-normalized flash state (acc, m, l): the partial-softmax
+    Pallas kernel on TPU, its jnp partial oracle elsewhere."""
+    if jax.default_backend() == "tpu":
+        return paged_prefill_attention_fused(
+            q, kv_pages, block_tables, row_pos, lengths, scale=scale,
+            window=window, softcap=softcap, partial=True)
+    return paged_prefill_attention_partial_ref(
+        q, kv_pages, block_tables, row_pos, lengths, scale=scale,
+        window=window, softcap=softcap)
+
+
+def _head_sharded(q, kv_pages, block_tables, row_pos, lengths, *,
                   scale, window, softcap, mesh, axis):
     """KV heads shard on ``axis``; q [R, Sq, Hkv, G, D] shards its Hkv dim in
-    lockstep with the page pools, so per-head math is untouched and the
+    lockstep with the fused page pool, so per-head math is untouched and the
     output only needs one re-replicating all-gather (no arithmetic)."""
-    def one_shard(q_, k_, v_, bt_, rp_, ln_):
-        return _single_device(q_, k_, v_, bt_, rp_, ln_, scale=scale,
+    def one_shard(q_, kv_, bt_, rp_, ln_):
+        return _single_device(q_, kv_, bt_, rp_, ln_, scale=scale,
                               window=window, softcap=softcap)
 
     fn = shard_map(one_shard, mesh=mesh,
                    in_specs=(P(None, None, axis, None, None),
-                             P(axis, None, None, None),
-                             P(axis, None, None, None),
+                             P(axis, None, None, None, None),
                              P(None, None), P(None), P(None)),
                    out_specs=P(None, None, axis, None, None))
-    out = fn(q, k_pages, v_pages, block_tables, row_pos, lengths)
+    out = fn(q, kv_pages, block_tables, row_pos, lengths)
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
 
 
-def _seq_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
+def _seq_sharded(q, kv_pages, block_tables, row_pos, lengths, *,
                  scale, window, softcap, mesh, axis):
     """Replicated pages, block-table columns sharded: shard i attends its
-    rows' queries over logical pages [i*n/m, (i+1)*n/m) and contributes a
-    partial softmax. Mirrors ``paged_prefill_attention_ref`` term for term —
-    only the cross-shard grouping of the sums differs."""
+    rows' queries over logical pages [i*n/m, (i+1)*n/m) and contributes the
+    un-normalized flash state from the partial-softmax kernel/oracle (every
+    mask term depends only on position differences, so shard-local
+    ``row_pos - offset`` / ``lengths - offset`` carry the global
+    semantics). The flash combine — ``pmax``/``psum`` — is the only
+    cross-shard arithmetic."""
     m = axis_size(mesh, axis)
     R, Sq = q.shape[0], q.shape[1]
-    ps = k_pages.shape[2]
+    ps = kv_pages.shape[3]
     n = block_tables.shape[1]
     if n % m:
         pad = m - n % m            # page-0 pad columns land past every
@@ -89,41 +108,24 @@ def _seq_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths, *,
             block_tables, NamedSharding(mesh, P()))
     n_loc = block_tables.shape[1] // m
 
-    def one_shard(q_, kp, vp, bt_, rp, ln):
+    def one_shard(q_, kvp, bt_, rp, ln):
         i = jax.lax.axis_index(axis)
-        g = kp[:, bt_]                          # [Hkv, R, n_loc, ps, D]
-        Hkv, _, _, _, D = g.shape
-        k_all = g.transpose(1, 2, 3, 0, 4).reshape(R, n_loc * ps, Hkv, D)
-        v_all = vp[:, bt_].transpose(1, 2, 3, 0, 4).reshape(
-            R, n_loc * ps, Hkv, D)
-        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_, k_all,
-                       preferred_element_type=jnp.float32) * scale
-        if softcap and softcap > 0.0:
-            s = softcap * jnp.tanh(s / softcap)
-        k_pos = i * (n_loc * ps) + jnp.arange(n_loc * ps)   # global positions
-        q_pos = jnp.asarray(rp).reshape(-1, 1) + jnp.arange(Sq)[None, :]
-        mask = k_pos[None, None, :] <= q_pos[:, :, None]    # [R, Sq, k]
-        if window and window > 0:
-            mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
-        mask = mask & (k_pos[None, None, :]
-                       < jnp.asarray(ln).reshape(-1, 1, 1))
-        mask = mask[:, None, None]                          # [R,1,1,Sq,k]
-        s = jnp.where(mask, s, NEG_INF)
-        m_loc = jnp.max(s, axis=-1, keepdims=True)
-        m_glob = jax.lax.pmax(m_loc, axis)      # exact: max is associative
-        e = jnp.exp(s - m_glob)
-        den = jax.lax.psum(jnp.sum(e, axis=-1, keepdims=True), axis)
-        p = (e / den).astype(v_all.dtype)
-        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
-        return jax.lax.psum(out, axis)
+        off = i * (n_loc * ps)                  # shard's global key offset
+        acc, mx, l = _partials(q_, kvp, bt_, rp - off, ln - off, scale=scale,
+                               window=window, softcap=softcap)
+        m_glob = jax.lax.pmax(mx, axis)         # exact: max is associative
+        c = jnp.exp(mx - m_glob)
+        num = jax.lax.psum(acc * c[..., None], axis)
+        den = jax.lax.psum(l * c, axis)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q_.dtype)
 
     fn = shard_map(one_shard, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(None, axis), P(), P()),
+                   in_specs=(P(), P(), P(None, axis), P(), P()),
                    out_specs=P())
-    return fn(q, k_pages, v_pages, block_tables, row_pos, lengths)
+    return fn(q, kv_pages, block_tables, row_pos, lengths)
 
 
-def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
+def paged_prefill_attention_auto(q, kv_pages, block_tables, row_pos,
                                  lengths, *, scale, window=0, softcap=0.0,
                                  mesh=None, axis="model"):
     """Mesh-aware dispatch used inside the model's paged-chunk forward (see
@@ -131,13 +133,13 @@ def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, row_pos,
     pre-mesh single-device path."""
     m = axis_size(mesh, axis)
     if m <= 1:
-        return _single_device(q, k_pages, v_pages, block_tables, row_pos,
+        return _single_device(q, kv_pages, block_tables, row_pos,
                               lengths, scale=scale, window=window,
                               softcap=softcap)
-    if head_shards(k_pages.shape[0], mesh, axis) > 1:
-        return _head_sharded(q, k_pages, v_pages, block_tables, row_pos,
+    if head_shards(kv_pages.shape[0], mesh, axis) > 1:
+        return _head_sharded(q, kv_pages, block_tables, row_pos,
                              lengths, scale=scale, window=window,
                              softcap=softcap, mesh=mesh, axis=axis)
-    return _seq_sharded(q, k_pages, v_pages, block_tables, row_pos, lengths,
+    return _seq_sharded(q, kv_pages, block_tables, row_pos, lengths,
                         scale=scale, window=window, softcap=softcap,
                         mesh=mesh, axis=axis)

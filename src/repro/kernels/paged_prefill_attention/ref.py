@@ -1,18 +1,27 @@
-"""Pure-jnp oracle for the paged-prefill attention kernel.
+"""Pure-jnp oracles for the paged-prefill attention kernel.
 
-Matches the pre-kernel engine path bit-for-bit on CPU: gather each row's
-logical KV view from the physical pages (``gather_pages``) and run exactly
-the dense masked-softmax math the serving engine's ``_chunk_attend`` used,
-op for op. The Pallas kernel is validated against this oracle to fp32
-tolerance; the slot-vs-paged engine equivalence suite rides on the oracle
-being bit-identical to the legacy path.
+Thin wrappers over :mod:`repro.kernels.ref_common`. The split-layout oracle
+matches the pre-kernel engine path bit-for-bit on CPU: gather each row's
+logical KV view from the physical pages and run exactly the dense
+masked-softmax math the serving engine's ``_chunk_attend`` used, op for op —
+the slot-vs-paged engine equivalence suite rides on that staying bitwise
+stable. The fused-layout and partial variants reuse the same shared math, so
+they are written once for both kernels.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.models.attention import NEG_INF, gather_pages
+from repro.kernels import ref_common as rc
+from repro.kernels.ref_common import NEG_INF  # re-export (legacy import site)
+
+
+def _prefill_masked_scores(q, k_pages, block_tables, row_pos, lengths, *,
+                           scale, window, softcap):
+    k_all = rc.gather_rows(k_pages, block_tables)   # [R, n*ps, Hkv, D]
+    s = rc.prefill_scores(q, k_all, scale=scale, softcap=softcap)
+    return rc.prefill_mask(s, row_pos, lengths, window=window,
+                           k_pos=jnp.arange(k_all.shape[1]), Sq=q.shape[1])
 
 
 def paged_prefill_attention_ref(
@@ -31,22 +40,35 @@ def paged_prefill_attention_ref(
     ``k <= row_pos[r] + t`` (causal at the row's own offset), clipped to
     ``k < lengths[r]`` and the sliding window; padding rows (lengths == 0)
     produce garbage the caller discards."""
-    Sq = q.shape[1]
-    k_all = gather_pages(k_pages, block_tables)     # [R, n*ps, Hkv, D]
-    v_all = gather_pages(v_pages, block_tables)
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_all,
-                   preferred_element_type=jnp.float32) * scale
-    if softcap and softcap > 0.0:
-        s = softcap * jnp.tanh(s / softcap)
-    Sk = k_all.shape[1]
-    k_pos = jnp.arange(Sk)
-    q_pos = jnp.asarray(row_pos).reshape(-1, 1) + jnp.arange(Sq)[None, :]
-    mask = k_pos[None, None, :] <= q_pos[:, :, None]          # [R, Sq, Sk]
-    if window and window > 0:
-        mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
-    mask = mask & (k_pos[None, None, :]
-                   < jnp.asarray(lengths).reshape(-1, 1, 1))
-    mask = mask[:, None, None]                                # [R,1,1,Sq,Sk]
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1).astype(v_all.dtype)
-    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
+    s = _prefill_masked_scores(q, k_pages, block_tables, row_pos, lengths,
+                               scale=scale, window=window, softcap=softcap)
+    v_all = rc.gather_rows(v_pages, block_tables)
+    return rc.prefill_softmax_v(s, v_all)
+
+
+def paged_prefill_attention_fused_ref(q, kv_pages, block_tables, row_pos,
+                                      lengths, *, scale, window=0,
+                                      softcap=0.0):
+    """Fused head-interleaved layout (kv_pages [Hkv, P, 2, ps, D]); output
+    bit-identical to ``paged_prefill_attention_ref`` on equivalent split
+    pools."""
+    k_pages, v_pages = rc.split_fused(kv_pages)
+    return paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                       row_pos, lengths, scale=scale,
+                                       window=window, softcap=softcap)
+
+
+def paged_prefill_attention_partial_ref(q, kv_pages, block_tables, row_pos,
+                                        lengths, *, scale, window=0,
+                                        softcap=0.0):
+    """Partial-softmax oracle over the fused layout: un-normalized flash
+    state ``(acc [R,Sq,Hkv,G,D] f32, m [R,Sq,Hkv,G] f32, l [R,Sq,Hkv,G]
+    f32)``. ``row_pos``/``lengths`` may be shard-local (global minus the
+    shard's key offset): every mask term depends only on position
+    differences, so the sequence-sharded fallback passes local offsets and
+    the global semantics fall out."""
+    k_pages, v_pages = rc.split_fused(kv_pages)
+    s = _prefill_masked_scores(q, k_pages, block_tables, row_pos, lengths,
+                               scale=scale, window=window, softcap=softcap)
+    v_all = rc.gather_rows(v_pages, block_tables)
+    return rc.prefill_partials(s, v_all)

@@ -1,0 +1,179 @@
+"""Shared jnp oracle math for the paged attention kernels.
+
+``paged_attention/ref.py`` (decode) and ``paged_prefill_attention/ref.py``
+(ragged chunked prefill) used to each carry their own copy of the same
+gather-pages + masked-softmax reference; both are now thin wrappers over this
+module, so the fused-layout refs and the partial-softmax oracles are written
+exactly once. Every helper reproduces the original refs' operations *in the
+same order* — the slot-vs-paged engine equivalence suite and the bit-identical
+greedy-token guarantees ride on the oracles staying bitwise stable.
+
+Layouts:
+
+* **split**: separate ``k_pages``/``v_pages`` pools, each ``[Hkv, P, ps, D]``
+  (the pre-fusion layout, kept for the layout A/B benchmarks).
+* **fused head-interleaved**: one pool ``[Hkv, P, 2, ps, D]`` with K at
+  interleave index 0 and V at index 1 (tpu_commons-v3 style) — half the pool
+  objects, one DMA per (head, page) instead of two.
+
+Partials: the ``*_partials`` variants return the un-normalized flash-softmax
+state ``(acc, m, l)`` — ``acc = sum(exp(s - m) @ v)``, ``m = row max``,
+``l = sum(exp(s - m))`` — which the sequence-sharded mesh fallback combines
+across shards flash-decode style (``pmax`` of m, ``psum`` of rescaled acc/l).
+``finalize_partials`` reproduces the kernels' final division bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+K_IDX, V_IDX = 0, 1   # interleave positions inside a fused page
+
+
+def split_fused(kv_pages: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Views of the K and V planes of a fused pool [Hkv, P, 2, ps, D]."""
+    return kv_pages[:, :, K_IDX], kv_pages[:, :, V_IDX]
+
+
+# ---------------------------------------------------------------------------
+# gathers
+# ---------------------------------------------------------------------------
+def gather_seq(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """[Hkv, P, ps, D] + [B, n] -> each row's logical view [B, Hkv, n*ps, D]
+    (the decode oracle's operand layout)."""
+    g = pages[:, block_tables]                  # [Hkv, B, n, ps, D]
+    Hkv, B, n, ps, D = g.shape
+    return g.transpose(1, 0, 2, 3, 4).reshape(B, Hkv, n * ps, D)
+
+
+def gather_rows(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """[Hkv, P, ps, D] + [R, n] -> [R, n*ps, Hkv, D] (the prefill oracle's
+    operand layout — identical to ``models.attention.gather_pages``)."""
+    g = pages[:, block_tables]                  # [Hkv, R, n, ps, D]
+    Hkv, R, n, ps, D = g.shape
+    return g.transpose(1, 2, 3, 0, 4).reshape(R, n * ps, Hkv, D)
+
+
+# ---------------------------------------------------------------------------
+# decode (one query token per sequence)
+# ---------------------------------------------------------------------------
+def decode_scores(q: jnp.ndarray, k_seq: jnp.ndarray, *, scale: float,
+                  softcap: float) -> jnp.ndarray:
+    """[B, H, D] x [B, Hkv, Sk, D] -> masked-input scores [B, Hkv, G, Sk]."""
+    B, H, D = q.shape
+    Hkv = k_seq.shape[1]
+    qg = q.reshape(B, Hkv, H // Hkv, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_seq,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def decode_mask(s: jnp.ndarray, lengths: jnp.ndarray, *, window: int,
+                k_pos: jnp.ndarray) -> jnp.ndarray:
+    """Valid-length + sliding-window mask at (possibly shard-local) key
+    positions ``k_pos`` [Sk]; masked entries become NEG_INF."""
+    mask = k_pos[None, None, None, :] < lengths[:, None, None, None]
+    if window > 0:
+        mask &= k_pos[None, None, None, :] >= (lengths - window)[:, None, None, None]
+    return jnp.where(mask, s, NEG_INF)
+
+
+def decode_softmax_v(s: jnp.ndarray, v_seq: jnp.ndarray,
+                     out_dtype) -> jnp.ndarray:
+    """Full (normalized) softmax @ V: [B, Hkv, G, Sk] -> [B, H, D]."""
+    B, Hkv, G, _ = s.shape
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_seq.dtype), v_seq,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hkv * G, v_seq.shape[-1]).astype(out_dtype)
+
+
+def decode_partials(s: jnp.ndarray, v_seq: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Un-normalized flash state from masked scores: acc [B, H, D] f32,
+    m [B, H] f32, l [B, H] f32. ``finalize_partials`` (or the cross-shard
+    combine) turns this into the attention output."""
+    B, Hkv, G, _ = s.shape
+    m = jnp.max(s, axis=-1)                               # [B, Hkv, G]
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhgk,bhkd->bhgd", e.astype(v_seq.dtype), v_seq,
+                     preferred_element_type=jnp.float32)
+    D = v_seq.shape[-1]
+    return (acc.reshape(B, Hkv * G, D), m.reshape(B, Hkv * G),
+            l.reshape(B, Hkv * G))
+
+
+def finalize_partials(acc: jnp.ndarray, l: jnp.ndarray,
+                      out_dtype) -> jnp.ndarray:
+    """The kernels' finalize step, bit-for-bit: acc / max(l, 1e-30)."""
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(out_dtype)
+
+
+def combine_partials(parts, out_dtype):
+    """Merge flash partials from disjoint key ranges: ``parts`` is a sequence
+    of (acc, m, l) triples. Pure-jnp mirror of the mesh fallback's
+    ``pmax``/``psum`` combine (used by tests; the sharded path inlines the
+    same formula with lax collectives)."""
+    m_glob = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_glob = jnp.maximum(m_glob, m)
+    acc = jnp.zeros_like(parts[0][0])
+    l = jnp.zeros_like(parts[0][2])
+    for a, m, s in parts:
+        c = jnp.exp(m - m_glob)
+        acc = acc + a * c[..., None]
+        l = l + s * c
+    return finalize_partials(acc, l, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# ragged chunked prefill (rows of Sq queries at per-row cache offsets)
+# ---------------------------------------------------------------------------
+def prefill_scores(q: jnp.ndarray, k_all: jnp.ndarray, *, scale: float,
+                   softcap: float) -> jnp.ndarray:
+    """[R, Sq, Hkv, G, D] x [R, Sk, Hkv, D] -> scores [R, Hkv, G, Sq, Sk]."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k_all,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def prefill_mask(s: jnp.ndarray, row_pos: jnp.ndarray, lengths: jnp.ndarray,
+                 *, window: int, k_pos: jnp.ndarray, Sq: int) -> jnp.ndarray:
+    """Causal-at-offset + sliding-window + valid-length mask at (possibly
+    shard-local) key positions ``k_pos`` [Sk]."""
+    q_pos = jnp.asarray(row_pos).reshape(-1, 1) + jnp.arange(Sq)[None, :]
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]          # [R, Sq, Sk]
+    if window and window > 0:
+        mask = mask & (q_pos[:, :, None] - k_pos[None, None, :] < window)
+    mask = mask & (k_pos[None, None, :]
+                   < jnp.asarray(lengths).reshape(-1, 1, 1))
+    mask = mask[:, None, None]                                # [R,1,1,Sq,Sk]
+    return jnp.where(mask, s, NEG_INF)
+
+
+def prefill_softmax_v(s: jnp.ndarray, v_all: jnp.ndarray) -> jnp.ndarray:
+    """Full softmax @ V: -> [R, Sq, Hkv, G, D] (the refs' return layout)."""
+    p = jax.nn.softmax(s, axis=-1).astype(v_all.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
+
+
+def prefill_partials(s: jnp.ndarray, v_all: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Un-normalized flash state for the prefill shape: acc
+    [R, Sq, Hkv, G, D] f32, m/l [R, Sq, Hkv, G] f32 (query-major so the
+    caller's combine broadcasts cleanly)."""
+    m = jnp.max(s, axis=-1)                                   # [R, Hkv, G, Sq]
+    e = jnp.exp(s - m[..., None])
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bqhgd", e.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    return acc, m.transpose(0, 3, 1, 2), l.transpose(0, 3, 1, 2)

@@ -188,7 +188,8 @@ def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
 def paged_cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
                       axis: str = "model") -> Any:
     """PartitionSpecs for the *serving* paged KV pools (``init_paged_cache``
-    leaves, ``[reps, Hkv, num_pages, page_size, Dh]``).
+    leaves, fused head-interleaved ``[reps, Hkv, num_pages, 2, page_size,
+    Dh]`` — K at interleave 0, V at 1).
 
     Mirrors :func:`cache_specs`' head rule: pages shard their KV-head dim on
     ``axis`` when the head count divides it; otherwise the pools stay

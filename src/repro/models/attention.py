@@ -310,6 +310,30 @@ def write_pages(
     return flat.reshape(Hkv, P, ps, D)
 
 
+def write_pages_fused(
+    kv_pages: jnp.ndarray,  # [Hkv, P, 2, ps, D] fused head-interleaved pool
+    k_new: jnp.ndarray,     # [R, L, Hkv, D] new keys (row-major tokens)
+    v_new: jnp.ndarray,     # [R, L, Hkv, D] new values
+    slots: jnp.ndarray,     # [R*L] int32 flat destinations (page*ps + offset)
+) -> jnp.ndarray:
+    """Scatter K and V into the fused pool with ONE gather-scatter.
+
+    Token slot ``p*ps + o`` lands at flat index ``p*(2*ps) + o`` for K and
+    ``p*(2*ps) + ps + o`` for V (K plane then V plane inside each page), so
+    a single indexed update covers both — one scatter kernel per layer where
+    the split layout dispatched two. Trash-slot semantics match
+    :func:`write_pages`."""
+    Hkv, P, two, ps, D = kv_pages.shape
+    flat = kv_pages.reshape(Hkv, P * two * ps, D)
+    k_idx = (slots // ps) * (two * ps) + slots % ps
+    idx = jnp.concatenate([k_idx, k_idx + ps])
+    upd = jnp.concatenate([k_new.reshape(-1, Hkv, D),
+                           v_new.reshape(-1, Hkv, D)]).transpose(1, 0, 2)
+    flat = flat.at[:, idx].set(upd.astype(flat.dtype), mode="drop",
+                               unique_indices=False)
+    return flat.reshape(Hkv, P, two, ps, D)
+
+
 def update_kv_cache(
     cache: jnp.ndarray,  # [B, S, ...]
     new: jnp.ndarray,    # [B, n, ...]

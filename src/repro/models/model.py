@@ -266,19 +266,25 @@ def supports_paged_cache(cfg: ModelConfig) -> bool:
     return not cfg.enc_dec and set(cfg.layer_pattern) <= {ATTN, LOCAL_ATTN}
 
 
+PAGED_KV_LAYOUT = "fused-head-interleaved-v1"   # cache/upload versioning tag
+
+
 def _slot_paged_cache(cfg: ModelConfig, mixer: str, num_pages: int,
                       page_size: int, dtype) -> Params:
     Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
     if mixer in (ATTN, LOCAL_ATTN):
-        return {"k_pages": jnp.zeros((Hkv, num_pages, page_size, Dh), dtype),
-                "v_pages": jnp.zeros((Hkv, num_pages, page_size, Dh), dtype)}
+        # fused head-interleaved layout (tpu_commons-v3 style): K at
+        # interleave index 0, V at 1, adjacent per (head, page) — one pool
+        # object, one block-table consumer, one DMA per page.
+        return {"kv_pages": jnp.zeros((Hkv, num_pages, 2, page_size, Dh),
+                                      dtype)}
     raise ValueError(f"paged cache does not support mixer {mixer!r}")
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
                      dtype=None) -> Params:
-    """Physical page pools, one [Hkv, num_pages, page_size, Dh] pair per
-    layer (leaves stacked [reps, ...] like ``init_cache``). ``num_pages``
+    """Physical fused KV page pools, one [Hkv, num_pages, 2, page_size, Dh]
+    leaf per layer (stacked [reps, ...] like ``init_cache``). ``num_pages``
     includes any trash page the caller reserves; there is no batch axis —
     concurrency is bounded by pages, not rows."""
     dtype = dtype or cfg.dtype
@@ -359,28 +365,27 @@ def attn_block(cfg, rctx, p, x, state, *, mode, pos, lengths, window,
         new_state = dict(state, k=k_all, v=v_all)
         o = _chunk_attend(cfg, rctx, q, k_all, v_all, pos, lengths, window)
     elif mode == "paged_chunk":
-        # fused ragged prefill: scatter the chunk's KV into physical pages
-        # (vLLM slot mapping; padding rows target the trash page), then attend
-        # directly over the block tables — no gathered k_all/v_all buffer and
-        # no dense [R,H,G,Sq,Sk] score tensor (Pallas kernel on TPU, its
-        # bit-identical jnp oracle on CPU).
+        # fused ragged prefill: scatter the chunk's KV into the fused
+        # head-interleaved physical pages with one combined K+V scatter
+        # (vLLM slot mapping; padding rows target the trash page), then
+        # attend directly over the block tables — no gathered k_all/v_all
+        # buffer and no dense [R,H,G,Sq,Sk] score tensor (double-buffered
+        # Pallas kernel on TPU, its bit-identical jnp oracle on CPU).
         from repro.kernels.paged_prefill_attention.ops import (
             paged_prefill_attention_auto)
-        kp = A.write_pages(state["k_pages"], k, paged.write_slots)
-        vp = A.write_pages(state["v_pages"], v, paged.write_slots)
-        new_state = dict(state, k_pages=kp, v_pages=vp)
+        kvp = A.write_pages_fused(state["kv_pages"], k, v, paged.write_slots)
+        new_state = dict(state, kv_pages=kvp)
         o = paged_prefill_attention_auto(
-            q, kp, vp, paged.block_tables, jnp.asarray(pos),
+            q, kvp, paged.block_tables, jnp.asarray(pos),
             jnp.asarray(lengths), scale=scale, window=window,
             softcap=cfg.attn_logit_softcap, mesh=rctx.mesh,
             axis=rctx.shard_axis)
     elif mode == "paged_decode":
         from repro.kernels.paged_attention.ops import paged_attention_auto
-        kp = A.write_pages(state["k_pages"], k, paged.write_slots)
-        vp = A.write_pages(state["v_pages"], v, paged.write_slots)
-        new_state = dict(state, k_pages=kp, v_pages=vp)
+        kvp = A.write_pages_fused(state["kv_pages"], k, v, paged.write_slots)
+        new_state = dict(state, kv_pages=kvp)
         H, Dh = cfg.num_heads, cfg.resolved_head_dim
-        o = paged_attention_auto(q[:, 0].reshape(B, H, Dh), kp, vp,
+        o = paged_attention_auto(q[:, 0].reshape(B, H, Dh), kvp,
                                  paged.block_tables, jnp.asarray(lengths),
                                  scale=scale, window=window,
                                  softcap=cfg.attn_logit_softcap,

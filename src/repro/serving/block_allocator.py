@@ -12,7 +12,12 @@ Beyond pure accounting the allocator hands out *physical page ids* from a
 free list; the engine turns an owner's ``page_ids`` into the block table rows
 the paged attention kernels consume. The analytic simulator ignores the ids
 and uses only the counting API — both views are kept consistent by
-``check_invariants``.
+``check_invariants``. Page ids and token slots (``page*page_size + offset``)
+are **layout-independent**: the fused head-interleaved KV pool
+(``[Hkv, P, 2, ps, D]``, ``models.model.PAGED_KV_LAYOUT``) changed the
+physical bytes behind a page without touching this accounting, the radix
+index, or COW semantics — only the engine-side scatter
+(``write_pages_fused``) and the kernels interpret the layout.
 
 **Prefix cache (radix/COW layer).** Full pages whose token content is known
 can be *committed* into a content index keyed by the chain

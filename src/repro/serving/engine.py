@@ -77,10 +77,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MAMBA, MLSTM, SLSTM, ModelConfig
 from repro.core.scheduler import KVPressure, SchedulerBase
-from repro.models.model import (RunCtx, chunk_prefill_step, decode_step,
-                                init_cache, init_paged_cache, init_params,
-                                paged_chunk_step, paged_decode_step,
-                                supports_paged_cache)
+from repro.models.model import (PAGED_KV_LAYOUT, RunCtx, chunk_prefill_step,
+                                decode_step, init_cache, init_paged_cache,
+                                init_params, paged_chunk_step,
+                                paged_decode_step, supports_paged_cache)
 from repro.serving.block_allocator import BlockAllocator
 from repro.serving.request import ReqState, Request
 
@@ -1123,8 +1123,10 @@ class EngineCore:
         the previous round is reused instead of re-uploaded. Keyed per
         consumer ``kind`` and per row-group, so the multiple same-shape
         dispatches of a split oversized round don't evict each other's
-        entries within one round."""
-        key = (kind, arr.shape)
+        entries within one round. The KV pool layout tag is part of the key:
+        a stale buffer uploaded against a different physical page layout
+        must never be reused (same table contents index different bytes)."""
+        key = (kind, arr.shape, PAGED_KV_LAYOUT)
         prev = self._dev_cache.get(key)
         if prev is not None and np.array_equal(prev[0], arr):
             self.stats.reused_uploads += 1

@@ -11,10 +11,17 @@ from repro.kernels.mamba_scan.kernel import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
 from repro.kernels.mlstm_chunkwise.kernel import mlstm_chunkwise
 from repro.kernels.mlstm_chunkwise.ref import mlstm_ref
-from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
-from repro.kernels.paged_prefill_attention.kernel import paged_prefill_attention
-from repro.kernels.paged_prefill_attention.ref import paged_prefill_attention_ref
+from repro.kernels.paged_attention.kernel import (paged_attention,
+                                                  paged_attention_fused)
+from repro.kernels.paged_attention.ref import (paged_attention_fused_ref,
+                                               paged_attention_partial_ref,
+                                               paged_attention_ref)
+from repro.kernels.paged_prefill_attention.kernel import (
+    paged_prefill_attention, paged_prefill_attention_fused)
+from repro.kernels.paged_prefill_attention.ref import (
+    paged_prefill_attention_fused_ref, paged_prefill_attention_partial_ref,
+    paged_prefill_attention_ref)
+from repro.kernels.ref_common import combine_partials, finalize_partials
 
 RNG = np.random.default_rng(42)
 
@@ -151,6 +158,210 @@ def test_paged_prefill_ref_matches_legacy_gather_path():
     legacy = Mod._chunk_attend(_Cfg(), None, q, k_all, v_all, pos, lens, 0,
                                scale=D ** -0.5)
     assert np.array_equal(np.asarray(ref), np.asarray(legacy))
+
+
+# ---------------------------------------------------------------------------
+# fused head-interleaved pool: double-buffered kernels + partial softmax
+# ---------------------------------------------------------------------------
+def _fused_pool(Hkv, P, ps, D, dtype):
+    kp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), dtype)
+    vp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), dtype)
+    return kp, vp, jnp.stack([kp, vp], axis=2)
+
+
+def _edge_lengths(B, n, ps):
+    """Deterministic decode-length edge cases: full table (exactly on the
+    last page boundary), exactly one page, shorter than one page, and an
+    interior mid-page length for any remaining rows."""
+    base = [n * ps, ps, max(ps - 3, 1), n * ps - ps // 2]
+    return jnp.asarray([base[i % len(base)] for i in range(B)], jnp.int32)
+
+
+FUSED_PA_CASES = [
+    # (B, Hkv, G, D, page_size, P_total, pages_per_seq, window, softcap)
+    (4, 4, 1, 32, 16, 16, 4, 0, 0.0),    # MHA (Hq/Hkv = 1)
+    (4, 2, 4, 64, 16, 32, 6, 0, 0.0),    # GQA ratio 4
+    (4, 1, 8, 64, 16, 16, 4, 0, 0.0),    # GQA ratio 8, single KV head
+    (4, 2, 2, 64, 32, 16, 4, 48, 0.0),   # sliding window
+    (4, 2, 2, 128, 16, 8, 3, 0, 30.0),   # softcap (gemma2)
+    (4, 2, 2, 64, 16, 16, 4, 23, 30.0),  # window + softcap together
+]
+
+
+@pytest.mark.parametrize("case", FUSED_PA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_fused(case, dtype):
+    """Double-buffered fused-layout decode kernel vs its jnp oracle, and the
+    oracle vs the legacy split-pool oracle (bit-identical split views)."""
+    B, Hkv, G, D, ps, P, n, window, cap = case
+    H = Hkv * G
+    q = jnp.asarray(RNG.normal(size=(B, H, D)), dtype)
+    kp, vp, kvp = _fused_pool(Hkv, P, ps, D, dtype)
+    bt = jnp.asarray(RNG.integers(0, P, (B, n)), jnp.int32)
+    lengths = _edge_lengths(B, n, ps)
+    out = paged_attention_fused(q, kvp, bt, lengths, scale=D ** -0.5,
+                                window=window, softcap=cap, interpret=True)
+    ref = paged_attention_fused_ref(q, kvp, bt, lengths, scale=D ** -0.5,
+                                    window=window, softcap=cap)
+    legacy = paged_attention_ref(q, kp, vp, bt, lengths, scale=D ** -0.5,
+                                 window=window, softcap=cap)
+    assert np.array_equal(np.asarray(ref), np.asarray(legacy)), \
+        "fused oracle must be bit-identical to the split-pool oracle"
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", FUSED_PA_CASES)
+def test_paged_attention_partial_recombines_bit_exact(case):
+    """finalize(partial kernel over the full page range) must equal the full
+    fused kernel bit-exactly — same loop, same math, one deferred division.
+    The partial jnp oracle must finalize to the full oracle the same way."""
+    B, Hkv, G, D, ps, P, n, window, cap = case
+    H = Hkv * G
+    q = jnp.asarray(RNG.normal(size=(B, H, D)), jnp.float32)
+    _, _, kvp = _fused_pool(Hkv, P, ps, D, jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (B, n)), jnp.int32)
+    lengths = _edge_lengths(B, n, ps)
+    full = paged_attention_fused(q, kvp, bt, lengths, scale=D ** -0.5,
+                                 window=window, softcap=cap, interpret=True)
+    acc, m, l = paged_attention_fused(q, kvp, bt, lengths, scale=D ** -0.5,
+                                      window=window, softcap=cap,
+                                      partial=True, interpret=True)
+    got = finalize_partials(acc, l, q.dtype)
+    assert np.array_equal(np.asarray(got), np.asarray(full))
+    # the full oracle normalizes before the V matmul (softmax-first), the
+    # partial oracle divides after — same math, different op order, so the
+    # oracle pair agrees to ulp scale rather than bitwise.
+    racc, rm, rl = paged_attention_partial_ref(q, kvp, bt, lengths,
+                                               scale=D ** -0.5, window=window,
+                                               softcap=cap)
+    rfull = paged_attention_fused_ref(q, kvp, bt, lengths, scale=D ** -0.5,
+                                      window=window, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(finalize_partials(racc, rl, q.dtype)), np.asarray(rfull),
+        atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_paged_attention_partial_cross_shard_combine(shards):
+    """Sharding the block-table columns, computing per-shard partials with
+    shard-local lengths (len - offset), and flash-combining matches the
+    unsharded oracle — the sequence-sharded mesh fallback's exact math."""
+    B, Hkv, G, D, ps, P, n = 3, 2, 2, 32, 8, 16, 8
+    q = jnp.asarray(RNG.normal(size=(B, Hkv * G, D)), jnp.float32)
+    _, _, kvp = _fused_pool(Hkv, P, ps, D, jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (B, n)), jnp.int32)
+    lengths = jnp.asarray([1, n * ps, n * ps // 2 + 3], jnp.int32)
+    ref = paged_attention_fused_ref(q, kvp, bt, lengths, scale=D ** -0.5)
+    n_loc = n // shards
+    parts = []
+    for i in range(shards):
+        cols = bt[:, i * n_loc:(i + 1) * n_loc]
+        parts.append(paged_attention_partial_ref(
+            q, kvp, cols, lengths - i * n_loc * ps, scale=D ** -0.5))
+    got = combine_partials(parts, q.dtype)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+FUSED_PPA_CASES = [
+    # (R, Sq, Hkv, G, D, page_size, P_total, pages_per_row, window, cap, bq)
+    (4, 16, 4, 1, 32, 16, 16, 6, 0, 0.0, 16),    # MHA
+    (4, 32, 2, 4, 64, 16, 32, 8, 0, 0.0, 32),    # GQA ratio 4
+    (4, 16, 1, 8, 64, 16, 16, 6, 0, 0.0, 16),    # GQA ratio 8
+    (4, 32, 2, 2, 64, 16, 16, 6, 40, 0.0, 32),   # sliding window
+    (4, 16, 2, 2, 128, 16, 8, 4, 0, 30.0, 16),   # softcap
+    (4, 16, 2, 2, 32, 16, 16, 6, 23, 30.0, 16),  # window + softcap
+]
+
+
+def _prefill_edges(R, Sq, n, ps):
+    """Row offsets/lengths hitting page-boundary and sub-page edges: a chunk
+    ending exactly on a page boundary, a whole tiny prompt shorter than one
+    page, a deep ragged chunk, and an all-padding row (trash page)."""
+    pos = np.zeros((R,), np.int32)
+    lens = np.zeros((R,), np.int32)
+    pos[0], lens[0] = ps - Sq % ps if Sq % ps else 0, 0
+    lens[0] = pos[0] + Sq                      # ends exactly on a boundary
+    pos[1], lens[1] = 0, max(ps - 3, 1)        # shorter than one page
+    pos[2], lens[2] = n * ps - Sq, n * ps      # deepest chunk, full table
+    for i in range(3, R - 1):
+        pos[i] = int(RNG.integers(0, n * ps - Sq + 1))
+        lens[i] = pos[i] + int(RNG.integers(1, Sq + 1))
+    pos[-1], lens[-1] = 0, 0                   # engine padding row
+    return pos, lens
+
+
+@pytest.mark.parametrize("case", FUSED_PPA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_attention_fused(case, dtype):
+    R, Sq, Hkv, G, D, ps, P, n, window, cap, bq = case
+    q = jnp.asarray(RNG.normal(size=(R, Sq, Hkv, G, D)), dtype)
+    kp, vp, kvp = _fused_pool(Hkv, P, ps, D, dtype)
+    bt = np.asarray(RNG.integers(0, P, (R, n)), np.int32)
+    pos, lens = _prefill_edges(R, Sq, n, ps)
+    bt[-1] = P - 1
+    bt, pos, lens = jnp.asarray(bt), jnp.asarray(pos), jnp.asarray(lens)
+    out = paged_prefill_attention_fused(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap,
+        block_q=bq, interpret=True)
+    ref = paged_prefill_attention_fused_ref(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap)
+    legacy = paged_prefill_attention_ref(
+        q, kp, vp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap)
+    assert np.array_equal(np.asarray(ref), np.asarray(legacy))
+    q_pos = np.asarray(pos)[:, None] + np.arange(Sq)[None, :]
+    valid = q_pos < np.asarray(lens)[:, None]
+    np.testing.assert_allclose(np.asarray(out, np.float32)[valid],
+                               np.asarray(ref, np.float32)[valid],
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("case", FUSED_PPA_CASES[:3])
+def test_paged_prefill_partial_recombines_bit_exact(case):
+    R, Sq, Hkv, G, D, ps, P, n, window, cap, bq = case
+    q = jnp.asarray(RNG.normal(size=(R, Sq, Hkv, G, D)), jnp.float32)
+    _, _, kvp = _fused_pool(Hkv, P, ps, D, jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (R, n)), jnp.int32)
+    pos, lens = _prefill_edges(R, Sq, n, ps)
+    pos, lens = jnp.asarray(pos), jnp.asarray(lens)
+    full = paged_prefill_attention_fused(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap,
+        block_q=bq, interpret=True)
+    acc, m, l = paged_prefill_attention_fused(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap,
+        block_q=bq, partial=True, interpret=True)
+    got = finalize_partials(acc, l, q.dtype)
+    q_pos = np.asarray(pos)[:, None] + np.arange(Sq)[None, :]
+    valid = q_pos < np.asarray(lens)[:, None]
+    assert np.array_equal(np.asarray(got)[valid], np.asarray(full)[valid])
+    # oracle pair: softmax-first vs divide-after — ulp-scale, not bitwise
+    racc, rm, rl = paged_prefill_attention_partial_ref(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap)
+    rfull = paged_prefill_attention_fused_ref(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(finalize_partials(racc, rl, q.dtype))[valid],
+        np.asarray(rfull)[valid], atol=2e-6, rtol=2e-6)
+
+
+def test_write_pages_fused_matches_split_scatter():
+    """One fused K+V scatter lands bytes exactly where two split-pool
+    scatters would (slot addressing unchanged, trash slot included)."""
+    from repro.models.attention import write_pages, write_pages_fused
+    Hkv, P, ps, D, T = 2, 8, 16, 32, 40
+    kp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(Hkv, P, ps, D)), jnp.float32)
+    kvp = jnp.stack([kp, vp], axis=2)
+    k_new = jnp.asarray(RNG.normal(size=(1, T, Hkv, D)), jnp.float32)
+    v_new = jnp.asarray(RNG.normal(size=(1, T, Hkv, D)), jnp.float32)
+    slots = jnp.asarray(RNG.choice(P * ps, size=T, replace=False), jnp.int64)
+    slots = slots.at[-1].set((P - 1) * ps)         # a trash-page write
+    fused = write_pages_fused(kvp, k_new, v_new, slots)
+    kp2 = write_pages(kp, k_new, slots)
+    vp2 = write_pages(vp, v_new, slots)
+    assert np.array_equal(np.asarray(fused),
+                          np.asarray(jnp.stack([kp2, vp2], axis=2)))
 
 
 # ---------------------------------------------------------------------------

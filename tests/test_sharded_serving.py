@@ -94,6 +94,7 @@ for n in (2, 6, 8):                          # 2 and 6 force the pad path
     q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)), jnp.float32)
     kp = jnp.asarray(rng.normal(size=(Hkv, Pg, ps, D)), jnp.float32)
     vp = jnp.asarray(rng.normal(size=(Hkv, Pg, ps, D)), jnp.float32)
+    kvp = jnp.stack([kp, vp], axis=2)        # fused head-interleaved pool
     bt = jnp.asarray(rng.integers(0, Pg, size=(B, n)), jnp.int32)
     ln = jnp.asarray([1, min(11, n * ps), n * ps - 3], jnp.int32)
     qp = jnp.asarray(rng.normal(size=(B, 4, Hkv, G, D)), jnp.float32)
@@ -107,12 +108,12 @@ for n in (2, 6, 8):                          # 2 and 6 force the pad path
             mesh = make_serving_mesh(spec)
             got = jax.jit(lambda *a: paged_attention_auto(
                 *a, scale=0.25, window=window, softcap=cap,
-                mesh=mesh))(q, kp, vp, bt, ln)
+                mesh=mesh))(q, kvp, bt, ln)
             assert float(jnp.max(jnp.abs(got - ref))) < 2e-6, \
                 ("decode", n, spec, window, cap)
             gotp = jax.jit(lambda *a: paged_prefill_attention_auto(
                 *a, scale=0.25, window=window, softcap=cap,
-                mesh=mesh))(qp, kp, vp, bt, rp, ln)
+                mesh=mesh))(qp, kvp, bt, rp, ln)
             assert float(jnp.max(jnp.abs(gotp - refp))) < 2e-6, \
                 ("prefill", n, spec, window, cap)
 print("SHARDED_PARITY_OK")
