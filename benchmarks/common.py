@@ -33,14 +33,15 @@ def hw_for(model_name: str, chips: int = 1) -> HardwareSpec:
 
 def run_sim(sched_name: str, model_name: str, dataset: str, qps: float,
             duration: float, seed: int = 3, kv_tokens: int = 512 * 1024,
-            sched_kwargs: Optional[Dict] = None, collect_trace: bool = False):
+            sched_kwargs: Optional[Dict] = None, collect_trace: bool = False,
+            sim_kwargs: Optional[Dict] = None):
     cfg = BENCH_MODELS[model_name]
     prof = ModelProfile.from_config(cfg)
     cm = CostModel(prof, hw_for(model_name), seed=7)
     wl = make_workload(WorkloadSpec(dataset, qps, duration, seed=seed), cm)
     sched = SCHEDULERS[sched_name](max_budget=4096, **(sched_kwargs or {}))
     sim = ServingSimulator(sched, cm, wl, kv_capacity_tokens=kv_tokens,
-                           collect_trace=collect_trace)
+                           collect_trace=collect_trace, **(sim_kwargs or {}))
     res = sim.run()
     return res, summarize(res.requests, res.duration)
 

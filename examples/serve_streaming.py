@@ -24,6 +24,16 @@ prefix-cache job): requests sharing one system prompt are served twice,
 cache on and cache off; the run asserts a non-zero hit rate, fewer computed
 prefill tokens, exact greedy-token parity between the two runs, and no page
 leak — also under a forced host mesh.
+
+``--spec-k K`` (K > 0) runs the speculative-decoding smoke instead (the CI
+spec-smoke job): periodic prompts are served with n-gram drafting at K and
+again at 0; the run asserts non-zero acceptance, more than one emitted
+token per verify row, exact greedy-token parity between the two runs, one
+readback per round, and no page leak. ``--temperature/--top-k/--sample-seed``
+switch the smoke to non-greedy sampling, where the assertion becomes
+same-seed determinism instead of spec-on/off parity (the sampled stream is
+a function of the per-round RNG fold, which speculation legitimately
+re-times).
 """
 import argparse
 
@@ -85,6 +95,60 @@ def shared_prefix_smoke(args):
           f"{on[1]['prefill_tokens_computed']}")
 
 
+def spec_smoke(args):
+    """Serve periodic prompts with speculative decoding on and off; assert
+    acceptance, multi-token verify rows, greedy parity, and the one-readback
+    invariant (the CI ``spec-smoke`` job)."""
+    cfg = get_config(args.arch).smoke()
+    rng = np.random.default_rng(11)
+    prompts = []
+    for _ in range(4):
+        base = rng.integers(1, cfg.vocab_size, 12)
+        prompts.append(np.tile(base, 32 // 12 + 1)[:32].astype(np.int32))
+    sampled = args.temperature > 0
+    sampling = dict(temperature=args.temperature, top_k=args.top_k,
+                    sample_seed=args.sample_seed)
+    # sampled mode compares two identical spec runs (determinism); greedy
+    # mode compares spec_k=K against spec_k=0 (bit-identical streams)
+    ks = (args.spec_k, args.spec_k) if sampled else (args.spec_k, 0)
+    runs = []
+    for k in ks:
+        server = InferenceServer.build(
+            cfg, cache_mode="paged", kv_capacity_tokens=args.kv_tokens,
+            mesh=make_serving_mesh(args.mesh), spec_k=k, **sampling)
+        core = server.core
+        if k == ks[0] and core.mesh is not None:
+            print(core.shard_banner())
+        handles = [server.submit(p, slo_class="standard", max_output=6)
+                   for p in prompts]
+        runs.append([h.result() for h in handles])
+        st = core.stats
+        assert st.token_readbacks == st.iterations, \
+            "speculation broke the one-readback-per-round property"
+        assert core.alloc.free_blocks == core.alloc.num_blocks, "KV leaked"
+        core.alloc.check_invariants()
+        if k:
+            si = core.spec_info()
+            print(f"spec_k={k}: acceptance {si['acceptance_rate']:.0%} "
+                  f"({si['accepted_tokens']}/{si['draft_tokens']} drafts), "
+                  f"{si['tokens_per_verify_row']:.2f} tokens/verify row, "
+                  f"{st.iterations} rounds")
+            assert si["draft_tokens"] > 0, "drafter never fired"
+            if not sampled:
+                # a sampled stream legitimately rejects every lookup draft;
+                # the acceptance bar is a greedy-mode assertion
+                assert si["accepted_tokens"] > 0, \
+                    "drafter never had a token accepted"
+                assert si["tokens_per_verify_row"] > 1.0, \
+                    "verify rows emitted no extra tokens"
+    assert runs[0] == runs[1], (
+        "sampled speculative run is not deterministic" if sampled
+        else "speculation changed the greedy stream")
+    mode = (f"temperature={args.temperature} determinism" if sampled
+            else f"greedy parity (spec_k={args.spec_k} vs 0)")
+    print(f"{mode} OK across {len(prompts)} streams")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -94,10 +158,21 @@ def main():
     ap.add_argument("--shared-prefix", action="store_true",
                     help="run the prefix-cache smoke (hit rate + parity "
                          "assertions) instead of the streaming demo")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="run the speculative-decoding smoke (acceptance + "
+                         "parity assertions) with K drafted tokens per row")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="with --spec-k: sample instead of greedy decode "
+                         "(asserts same-seed determinism, not parity)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     add_mesh_argument(ap)
     args = ap.parse_args()
     if args.shared_prefix:
         shared_prefix_smoke(args)
+        return
+    if args.spec_k > 0:
+        spec_smoke(args)
         return
 
     cfg = get_config(args.arch).smoke()

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.serving.request import Request
+from repro.serving.request import ReqState, Request
 
 Alloc = List[Tuple[Request, int]]
 
@@ -34,6 +34,14 @@ class BatchForwarder:
         self.max_budget = max_budget
         self.quantum = budget_quantum  # beyond-paper: bucket budgets for JIT warmth
         self.class_shares = class_shares   # None = class-blind legacy split
+        # Speculation price signals, written by the serving engine each
+        # speculative round and read here + by the scheduler: expected draft
+        # tokens riding each decode row (so to_batch prices decode rows as
+        # (1+s)-wide verify rows), and the std of the accepted length (the
+        # chunker's TBT-risk input — verify cost is paid up front while its
+        # token yield varies). Both 0.0 means plain decode pricing.
+        self.spec_draft_tokens = 0.0
+        self.spec_len_std = 0.0
 
     # ---- batch materialization ------------------------------------------------
     def allocate(self, decoding: Sequence[Request], prefill_sorted: Sequence[Request],
@@ -85,10 +93,21 @@ class BatchForwarder:
                 spill -= give
         return [(r, taken[id(r)]) for r in prefill_sorted if id(r) in taken]
 
-    @staticmethod
-    def to_batch(alloc: Alloc) -> List[Tuple[int, int]]:
-        """(c_i, u_i) pairs for the predictor/features."""
-        return [(n, r.context_len()) for r, n in alloc]
+    def _spec_s(self) -> int:
+        """Expected drafts per decode row, rounded to the batch-entry grain."""
+        return int(round(self.spec_draft_tokens))
+
+    def to_batch(self, alloc: Alloc) -> List[Tuple]:
+        """(c_i, u_i[, s_i]) entries for the predictor/features; decode rows
+        widen to expected verify width when the engine is speculating."""
+        s = self._spec_s()
+        out: List[Tuple] = []
+        for r, n in alloc:
+            if n <= 1 and s > 0 and r.state == ReqState.DECODING:
+                out.append((1 + s, r.context_len(), s))
+            else:
+                out.append((n, r.context_len()))
+        return out
 
     # ---- F.Forward / F.Pred / F.TimeToBudget -----------------------------------
     def forward(self, decoding, prefill_sorted, budget: int) -> Tuple[float, Alloc]:
@@ -106,7 +125,7 @@ class BatchForwarder:
         """(predicted_time, scheduled_tokens) of the next iteration's batch,
         with the queue advanced past window 1 (see pred_next)."""
         batch = self._next_batch(decoding, prefill_sorted, alloc1, budget2)
-        return self.predictor.predict(batch), sum(c for c, _ in batch)
+        return self.predictor.predict(batch), sum(e[0] for e in batch)
 
     def time_to_budget_next(self, decoding, prefill_sorted, alloc1: Alloc,
                             t_limit: float) -> int:
@@ -129,7 +148,11 @@ class BatchForwarder:
 
     def _next_batch(self, decoding, prefill_sorted, alloc1: Alloc, budget2: int):
         taken = {id(r): n for r, n in alloc1}
-        batch = [(1, r.context_len() + 1) for r in decoding]
+        s = self._spec_s()
+        if s > 0:
+            batch = [(1 + s, r.context_len() + 1, s) for r in decoding]
+        else:
+            batch = [(1, r.context_len() + 1) for r in decoding]
         left = budget2 - len(batch)
         for r in prefill_sorted:
             got = taken.get(id(r), 0)

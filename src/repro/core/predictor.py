@@ -156,7 +156,7 @@ class BatchLatencyPredictor:
         model = self.models.get(scene) or self.global_model
         if model is None:
             # cold start: crude proportional guess keeps the scheduler alive
-            return 1e-5 * float(sum(c for c, _ in batch) + 1)
+            return 1e-5 * float(sum(e[0] for e in batch) + 1)
         return max(model.predict(x), 1e-6)
 
     # ---- evaluation (paper Table 5) -------------------------------------------

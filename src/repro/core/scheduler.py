@@ -100,7 +100,7 @@ class SchedulerBase:
             cap = max(floor, cap // 2)
         return min(self.max_budget, cap)
 
-    def observe(self, batch: Sequence[Tuple[int, int]], latency: float,
+    def observe(self, batch: Sequence[Tuple], latency: float,
                 kv: Optional[KVPressure] = None) -> None:
         if kv is not None:
             self.last_kv = kv
@@ -109,8 +109,12 @@ class SchedulerBase:
             # rho_t estimates how fast *prefill* work drains (Eq. 9 divides
             # remaining prefill tokens by it), so measure prefill-token
             # throughput on rounds that carry prefill work; decode-only
-            # rounds would bias the estimate far low.
-            prefill_tokens = sum(c for c, _ in batch if c > 1)
+            # rounds would bias the estimate far low. Entries may be (c, u)
+            # or (c, u, s) — speculative verify rows (base width c - s <= 1)
+            # are decode work and must not count as prefill drain.
+            prefill_tokens = sum(
+                e[0] for e in batch
+                if e[0] - (e[2] if len(e) > 2 else 0) > 1)
             if prefill_tokens > 0:
                 tput = prefill_tokens / latency
                 self.rho = self._rho_beta * self.rho + (1 - self._rho_beta) * tput
@@ -172,9 +176,20 @@ class SlidingServeScheduler(SchedulerBase):
                                         granularity=self.knapsack_granularity)
                 if res is not None:
                     budget, alloc = res
-                    pred = self.predictor.predict(
-                        [(n, r.context_len()) for r, n in alloc])
+                    pred = self.predictor.predict(self.F.to_batch(alloc))
                     return Decision(alloc, pred, budget, "construct")
+
+        # (4b) Speculation risk: verify rows pay fixed multi-token cost for a
+        # variable token yield, so accepted-length *variance* is TBT risk —
+        # a volatile acceptance rate means some rows' TBT gains evaporate
+        # while their verify cost stays in the round. Tighten the current
+        # window by the time one std of at-risk draft tokens per decode row
+        # costs at the observed pace, shrinking chunk budgets exactly when
+        # speculation is least dependable. (Expected verify *cost* is already
+        # priced by F.to_batch widening decode rows; this handles the risk.)
+        if getattr(self.F, "spec_draft_tokens", 0.0) > 0 and D:
+            risk_tokens = self.F.spec_len_std * len(D)
+            t_cur = max(t_cur - risk_tokens / max(self.rho, 1e-6), 1e-4)
 
         # (5) SlidingChunker branch (or single-step when ablated off).
         if self.enable_sliding:

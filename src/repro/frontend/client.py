@@ -67,19 +67,22 @@ class HttpStreamHandle:
             elif line.startswith("data:"):
                 payload += line[5:].strip()
 
-    def _apply(self, name: str, data: Dict) -> Optional[int]:
+    def _apply(self, name: str, data: Dict) -> List[int]:
         self.events.append((name, data))
         if name in ("first_token", "token"):
             if name == "first_token":
                 self.first_token_t = data.get("t")
-            tok = int(data["token"])
-            self.collected.append(tok)
-            return tok
+            # a `token` frame carries the round's burst as `tokens: [ids]`
+            # (speculative rounds emit several); older servers send only the
+            # single `token` field.
+            toks = [int(t) for t in data.get("tokens", [data["token"]])]
+            self.collected.extend(toks)
+            return toks
         if name in ("finished", "aborted", "error"):
             self.finished = True
             self.finish_reason = ("aborted" if name != "finished"
                                   else data.get("reason", "length"))
-        return None
+        return []
 
     # ---- client surface ------------------------------------------------------
     @property
@@ -95,8 +98,7 @@ class HttpStreamHandle:
                 self.finished = True
                 self.finish_reason = self.finish_reason or "aborted"
                 break
-            tok = self._apply(name, data)
-            if tok is not None:
+            for tok in self._apply(name, data):
                 yield tok
         self._resp.close()
 

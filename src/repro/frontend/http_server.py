@@ -14,8 +14,11 @@ Endpoints::
                                 "stop_ids": [ids]}
         -> text/event-stream; one SSE event per engine event:
            `accepted` (carries the rid for mid-stream cancel), `queued`,
-           `admitted`, `first_token` / `token` (token ids), `evicted`,
-           and a terminal `finished` / `aborted`.
+           `admitted`, `first_token` / `token` (token ids; a `token` frame
+           carries the round's whole burst as `tokens: [ids]` — speculative
+           verify rows emit several ids per round — with `token` kept as the
+           first id for pre-batch consumers), `evicted`, and a terminal
+           `finished` / `aborted`.
     DELETE /v1/requests/{rid}  -> {"cancelled": bool}  (frees KV pages
                                   mid-prefill or mid-decode)
     GET    /v1/stats           -> EngineStats + cache_info + per-class
@@ -237,15 +240,36 @@ class HttpFrontend:
         writer.write(SSE_HEADERS)
         writer.write(self._sse("accepted", {"rid": rid}))
         n_tokens = 0
+        pending = None
         try:
             await writer.drain()
             while True:
-                ev = await asyncio.wait_for(
-                    q.get(), timeout=float(req.get("max_wall_s", 600.0)))
+                if pending is not None:
+                    ev, pending = pending, None
+                else:
+                    ev = await asyncio.wait_for(
+                        q.get(), timeout=float(req.get("max_wall_s", 600.0)))
                 data: Dict = {"rid": rid, "t": round(ev.t, 6)}
                 if ev.kind in (EventKind.FIRST_TOKEN, EventKind.TOKEN):
-                    data["token"] = int(ev.token)
-                    n_tokens += 1
+                    # coalesce the round's burst: a speculative verify row
+                    # emits several TOKEN events per engine round, and one
+                    # SSE frame should carry the whole burst. `token` stays
+                    # the first id for pre-batch consumers.
+                    toks = [int(ev.token)]
+                    if ev.kind is EventKind.TOKEN:
+                        while True:
+                            try:
+                                nxt = q.get_nowait()
+                            except asyncio.QueueEmpty:
+                                break
+                            if nxt.kind is EventKind.TOKEN:
+                                toks.append(int(nxt.token))
+                            else:
+                                pending = nxt
+                                break
+                    data["token"] = toks[0]
+                    data["tokens"] = toks
+                    n_tokens += len(toks)
                 if ev.kind in (EventKind.FINISHED, EventKind.ABORTED):
                     data["reason"] = (ev.reason or "length"
                                       if ev.kind is EventKind.FINISHED
@@ -313,7 +337,8 @@ def build_backend(arch: str = "llama3.2-3b", smoke: bool = True,
                   replicas: int = 1, policy: str = "prefix-affine",
                   cache_mode: str = "paged", kv_tokens: int = 4096,
                   page_size: int = 16, max_budget: int = 256,
-                  prefix_cache: bool = True, max_output_default: int = 64):
+                  prefix_cache: bool = True, max_output_default: int = 64,
+                  **engine_kw):
     """An :class:`InferenceServer` (1 replica) or :class:`EngineRouter`
     (N replicas) ready to sit behind :class:`HttpFrontend`. Replicas share
     ``seed=0`` params, so greedy tokens depend only on the prompt and any
@@ -334,7 +359,7 @@ def build_backend(arch: str = "llama3.2-3b", smoke: bool = True,
                                             max_iter_time=5.0),
             cache_mode=cache_mode, max_slots=4, max_len=512,
             kv_capacity_tokens=kv_tokens, page_size=page_size,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, **engine_kw)
 
     if replicas <= 1:
         return mk_server()
@@ -362,6 +387,12 @@ def main(argv=None):
     ap.add_argument("--max-budget", type=int, default=256)
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative drafts per decode round (0 = off)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     ap.add_argument("--drain-s", type=float, default=30.0,
                     help="graceful-shutdown drain deadline on SIGINT")
     args = ap.parse_args(argv)
@@ -370,7 +401,9 @@ def main(argv=None):
         arch=args.arch, smoke=args.smoke, replicas=args.replicas,
         policy=args.policy, cache_mode=args.cache_mode,
         kv_tokens=args.kv_tokens, page_size=args.page_size,
-        max_budget=args.max_budget, prefix_cache=args.prefix_cache)
+        max_budget=args.max_budget, prefix_cache=args.prefix_cache,
+        spec_k=args.spec_k, temperature=args.temperature, top_k=args.top_k,
+        sample_seed=args.sample_seed)
     frontend = HttpFrontend(backend, host=args.host, port=args.port,
                             drain_s=args.drain_s)
     asyncio.run(frontend.serve_forever())

@@ -152,7 +152,8 @@ def _fused_kernel(bt_ref, len_ref,   # scalar prefetch: [B, n], [B]
                   q_ref, kv_hbm,     # [1,1,G,D] VMEM, [Hkv,P,2,ps,D] HBM
                   *refs,             # outputs, then (scratch, sem)
                   scale: float, window: int, softcap: float,
-                  page_size: int, num_pages: int, partial: bool):
+                  page_size: int, num_pages: int, partial: bool,
+                  dma_depth: int):
     if partial:
         o_ref, m_out, l_out = refs[0], refs[1], refs[2]
         scratch, sem = refs[3], refs[4]
@@ -173,18 +174,23 @@ def _fused_kernel(bt_ref, len_ref,   # scalar prefetch: [B, n], [B]
         return pltpu.make_async_copy(
             kv_hbm.at[h, bt_ref[b, j]], scratch.at[slot], sem.at[slot])
 
-    @pl.when(pages_needed > 0)
-    def _warmup():
-        dma(0, 0).start()
+    # warmup: fill the ring — up to depth-1 copies in flight before the
+    # loop's first wait (depth 2 reduces to the classic single ping).
+    for i in range(dma_depth - 1):
+        @pl.when(i < pages_needed)
+        def _warmup(i=i):
+            dma(i, i).start()
 
     def body(j, carry):
         m_prev, l_prev, acc_prev = carry
-        slot = jax.lax.rem(j, 2)
-        # overlap: kick off page j+1's HBM->VMEM copy into the other buffer
-        # before blocking on page j, then compute on page j while it flies.
-        @pl.when(j + 1 < pages_needed)
+        slot = jax.lax.rem(j, dma_depth)
+        # overlap: kick off page j+depth-1's HBM->VMEM copy into the slot
+        # freed at iteration j-1, keeping depth-1 copies in flight while
+        # page j computes.
+        nxt = j + dma_depth - 1
+        @pl.when(nxt < pages_needed)
         def _prefetch_next():
-            dma(jax.lax.rem(j + 1, 2), j + 1).start()
+            dma(jax.lax.rem(nxt, dma_depth), nxt).start()
         dma(slot, j).wait()
         k = scratch[slot, K_IDX]                         # [ps, D]
         v = scratch[slot, V_IDX]
@@ -232,9 +238,16 @@ def paged_attention_fused(
     window: int = 0,
     softcap: float = 0.0,
     partial: bool = False,
+    dma_depth: int = 2,
     interpret: bool = False,
 ):
-    """Fused-layout decode attention with double-buffered page DMA.
+    """Fused-layout decode attention with ring-buffered page DMA.
+
+    ``dma_depth`` sets the VMEM ring depth: depth N keeps up to N-1 page
+    copies in flight behind the one being computed (2 = the classic
+    ping-pong double buffer; deeper rings absorb burstier HBM latency at
+    ``(N-2) * 2 * page_size * D`` extra VMEM per grid cell). Output is
+    bit-identical across depths — only the copy schedule changes.
 
     ``partial=False`` returns ``[B, H, D]`` in q's dtype. ``partial=True``
     returns the un-normalized flash state ``(acc [B,H,D] f32, m [B,H] f32,
@@ -247,6 +260,7 @@ def paged_attention_fused(
     B, H, D = q.shape
     Hkv, P_total, two, page_size, _ = kv_pages.shape
     assert two == 2, kv_pages.shape
+    assert dma_depth >= 2, dma_depth
     G = H // Hkv
     pages_per_seq = block_tables.shape[1]
 
@@ -254,7 +268,8 @@ def paged_attention_fused(
 
     kernel = functools.partial(
         _fused_kernel, scale=scale, window=window, softcap=softcap,
-        page_size=page_size, num_pages=pages_per_seq, partial=partial)
+        page_size=page_size, num_pages=pages_per_seq, partial=partial,
+        dma_depth=dma_depth)
 
     if partial:
         out_shape = (jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
@@ -279,8 +294,8 @@ def paged_attention_fused(
         ],
         out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((2, 2, page_size, D), kv_pages.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((dma_depth, 2, page_size, D), kv_pages.dtype),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
         ],
     )
     out = pl.pallas_call(

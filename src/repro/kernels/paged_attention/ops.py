@@ -25,6 +25,7 @@ mesh it runs under ``shard_map``:
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -38,24 +39,31 @@ from repro.kernels.paged_attention.ref import (
 from repro.kernels.shard_utils import axis_size, head_shards, shard_map
 
 
+def dma_depth() -> int:
+    """Page-DMA ring depth for the fused kernels (``REPRO_DMA_DEPTH``,
+    default 2 = classic double buffer). Bit-identical across depths —
+    deeper rings only trade VMEM for HBM-latency tolerance."""
+    return max(2, int(os.environ.get("REPRO_DMA_DEPTH", "2")))
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
                                              "interpret"))
 def paged_attention_op(q, kv_pages, block_tables, lengths, *, scale,
                        window=0, softcap=0.0, interpret=False):
     return paged_attention_fused(q, kv_pages, block_tables, lengths,
                                  scale=scale, window=window, softcap=softcap,
-                                 interpret=interpret)
+                                 dma_depth=dma_depth(), interpret=interpret)
 
 
 def _single_device(q, kv_pages, block_tables, lengths, *, scale,
                    window, softcap):
-    """Backend dispatch on one shard/device: the fused double-buffered Pallas
+    """Backend dispatch on one shard/device: the fused ring-buffered Pallas
     TPU kernel on TPU, the pure-jnp oracle elsewhere (CPU CI boxes).
     Traceable either way — the choice is made at trace time."""
     if jax.default_backend() == "tpu":
         return paged_attention_fused(q, kv_pages, block_tables, lengths,
                                      scale=scale, window=window,
-                                     softcap=softcap)
+                                     softcap=softcap, dma_depth=dma_depth())
     return paged_attention_fused_ref(q, kv_pages, block_tables, lengths,
                                      scale=scale, window=window,
                                      softcap=softcap)
@@ -67,7 +75,8 @@ def _partials(q, kv_pages, block_tables, lengths, *, scale, window, softcap):
     if jax.default_backend() == "tpu":
         return paged_attention_fused(q, kv_pages, block_tables, lengths,
                                      scale=scale, window=window,
-                                     softcap=softcap, partial=True)
+                                     softcap=softcap, partial=True,
+                                     dma_depth=dma_depth())
     return paged_attention_partial_ref(q, kv_pages, block_tables, lengths,
                                        scale=scale, window=window,
                                        softcap=softcap)

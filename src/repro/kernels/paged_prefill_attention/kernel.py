@@ -179,7 +179,7 @@ def _fused_kernel(bt_ref, pos_ref, len_ref,   # scalar prefetch [R,n],[R],[R]
                   *refs,                      # outputs, then (scratch, sem)
                   scale: float, window: int, softcap: float,
                   page_size: int, num_pages: int, block_q: int, group: int,
-                  partial: bool):
+                  partial: bool, dma_depth: int):
     if partial:
         o_ref, m_out, l_out = refs[0], refs[1], refs[2]
         scratch, sem = refs[3], refs[4]
@@ -213,18 +213,23 @@ def _fused_kernel(bt_ref, pos_ref, len_ref,   # scalar prefetch [R,n],[R],[R]
         return pltpu.make_async_copy(
             kv_hbm.at[h, bt_ref[r, j]], scratch.at[slot], sem.at[slot])
 
-    @pl.when(j_lo < j_hi)
-    def _warmup():
-        dma(jax.lax.rem(j_lo, 2), j_lo).start()
+    # warmup: fill the ring — up to depth-1 copies in flight before the
+    # loop's first wait (depth 2 reduces to the classic single ping).
+    for i in range(dma_depth - 1):
+        @pl.when(j_lo + i < j_hi)
+        def _warmup(i=i):
+            dma(jax.lax.rem(j_lo + i, dma_depth), j_lo + i).start()
 
     def body(j, carry):
         m_prev, l_prev, acc_prev = carry
-        slot = jax.lax.rem(j, 2)
-        # overlap: start page j+1's copy into the other buffer, then block
-        # on page j and compute while j+1 flies.
-        @pl.when(j + 1 < j_hi)
+        slot = jax.lax.rem(j, dma_depth)
+        # overlap: start page j+depth-1's copy into the slot freed at
+        # iteration j-1, then block on page j and compute while the ring's
+        # depth-1 outstanding copies fly.
+        nxt = j + dma_depth - 1
+        @pl.when(nxt < j_hi)
         def _prefetch_next():
-            dma(jax.lax.rem(j + 1, 2), j + 1).start()
+            dma(jax.lax.rem(nxt, dma_depth), nxt).start()
         dma(slot, j).wait()
         k = scratch[slot, K_IDX]                         # [ps, D]
         v = scratch[slot, V_IDX]
@@ -275,9 +280,14 @@ def paged_prefill_attention_fused(
     softcap: float = 0.0,
     block_q: int = 128,
     partial: bool = False,
+    dma_depth: int = 2,
     interpret: bool = False,
 ):
-    """Fused-layout ragged chunked prefill with double-buffered page DMA.
+    """Fused-layout ragged chunked prefill with ring-buffered page DMA.
+
+    ``dma_depth`` sets the VMEM page-copy ring depth: depth N keeps up to
+    N-1 copies in flight behind the page being computed (2 = the classic
+    ping-pong double buffer). Output is bit-identical across depths.
 
     ``partial=False`` returns ``[R, Sq, Hkv, G, D]`` (the oracle's contract).
     ``partial=True`` returns the un-normalized flash state
@@ -289,6 +299,7 @@ def paged_prefill_attention_fused(
     R, Sq, Hkv, G, D = q.shape
     _, _, two, page_size, _ = kv_pages.shape
     assert two == 2, kv_pages.shape
+    assert dma_depth >= 2, dma_depth
     num_pages = block_tables.shape[1]
     block_q = min(block_q, Sq)
     assert Sq % block_q == 0, (Sq, block_q)
@@ -300,7 +311,7 @@ def paged_prefill_attention_fused(
     kernel = functools.partial(
         _fused_kernel, scale=scale, window=window, softcap=softcap,
         page_size=page_size, num_pages=num_pages, block_q=block_q, group=G,
-        partial=partial)
+        partial=partial, dma_depth=dma_depth)
 
     if partial:
         out_shape = (
@@ -330,8 +341,8 @@ def paged_prefill_attention_fused(
         ],
         out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((2, 2, page_size, D), kv_pages.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((dma_depth, 2, page_size, D), kv_pages.dtype),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
         ],
     )
     out = pl.pallas_call(

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.kernels.paged_attention.ops import dma_depth
 from repro.kernels.paged_prefill_attention.kernel import (
     paged_prefill_attention, paged_prefill_attention_fused)
 from repro.kernels.paged_prefill_attention.ref import (
@@ -34,12 +35,13 @@ def paged_prefill_attention_op(q, kv_pages, block_tables, row_pos,
                                block_q=128, interpret=False):
     return paged_prefill_attention_fused(
         q, kv_pages, block_tables, row_pos, lengths, scale=scale,
-        window=window, softcap=softcap, block_q=block_q, interpret=interpret)
+        window=window, softcap=softcap, block_q=block_q,
+        dma_depth=dma_depth(), interpret=interpret)
 
 
 def _single_device(q, kv_pages, block_tables, row_pos, lengths, *,
                    scale, window, softcap):
-    """Backend dispatch on one shard/device: the fused double-buffered
+    """Backend dispatch on one shard/device: the fused ring-buffered
     Pallas TPU kernel on TPU (streams each K/V page once with one DMA, no
     gathered k_all/v_all and no dense [R,H,G,Sq,Sk] score tensor), the
     pure-jnp oracle elsewhere (CPU CI boxes). Traceable either way — the
@@ -47,7 +49,8 @@ def _single_device(q, kv_pages, block_tables, row_pos, lengths, *,
     if jax.default_backend() == "tpu":
         return paged_prefill_attention_fused(q, kv_pages, block_tables,
                                              row_pos, lengths, scale=scale,
-                                             window=window, softcap=softcap)
+                                             window=window, softcap=softcap,
+                                             dma_depth=dma_depth())
     return paged_prefill_attention_fused_ref(q, kv_pages, block_tables,
                                              row_pos, lengths, scale=scale,
                                              window=window, softcap=softcap)
@@ -60,7 +63,8 @@ def _partials(q, kv_pages, block_tables, row_pos, lengths, *, scale, window,
     if jax.default_backend() == "tpu":
         return paged_prefill_attention_fused(
             q, kv_pages, block_tables, row_pos, lengths, scale=scale,
-            window=window, softcap=softcap, partial=True)
+            window=window, softcap=softcap, partial=True,
+            dma_depth=dma_depth())
     return paged_prefill_attention_partial_ref(
         q, kv_pages, block_tables, row_pos, lengths, scale=scale,
         window=window, softcap=softcap)

@@ -59,6 +59,18 @@ def main(argv=None):
                     help="reuse frozen KV pages across requests sharing a "
                          "token prefix (paged mode; greedy tokens are "
                          "bit-identical either way)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "decode-eligible request per round (paged mode; "
+                         "n-gram prompt-lookup drafter; greedy tokens are "
+                         "bit-identical to --spec-k 0)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = full vocabulary)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="PRNG seed for non-greedy sampling (runs are "
+                         "deterministic per seed)")
     ap.add_argument("--serve-http", action="store_true",
                     help="expose the server over HTTP/SSE instead of "
                          "replaying a synthetic workload (SIGINT drains "
@@ -81,7 +93,9 @@ def main(argv=None):
             arch=args.arch, smoke=args.smoke, replicas=args.replicas,
             cache_mode=args.cache_mode, kv_tokens=args.kv_tokens,
             page_size=args.page_size, max_budget=args.max_budget,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, spec_k=args.spec_k,
+            temperature=args.temperature, top_k=args.top_k,
+            sample_seed=args.sample_seed)
         frontend = HttpFrontend(backend, port=args.port)
         asyncio.run(frontend.serve_forever())
         return None
@@ -95,7 +109,9 @@ def main(argv=None):
                       max_slots=4, max_len=512,
                       kv_capacity_tokens=args.kv_tokens,
                       page_size=args.page_size, mesh=mesh,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache, spec_k=args.spec_k,
+                      temperature=args.temperature, top_k=args.top_k,
+                      sample_seed=args.sample_seed)
     server = InferenceServer(core)
     if core.mesh is not None:
         print(core.shard_banner())
@@ -116,6 +132,11 @@ def main(argv=None):
           f"iterations={st.iterations} "
           f"max_concurrency={st.max_concurrency} evictions={st.evictions} "
           f"wall={out['wall']:.1f}s")
+    if core.spec_k:
+        si = core.spec_info()
+        print(f"speculation: acceptance {si['acceptance_rate']:.0%} "
+              f"({si['accepted_tokens']}/{si['draft_tokens']} drafts), "
+              f"{si['tokens_per_verify_row']:.2f} tokens/verify row")
     if core.cache_mode == "paged" and core.prefix_cache:
         ci = core.cache_info()
         print(f"prefix cache: hit {ci['hit_tokens']}/{ci['prompt_tokens']} "

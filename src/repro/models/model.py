@@ -767,34 +767,115 @@ def _greedy_sample(cfg: ModelConfig, params: Params, hidden) -> jnp.ndarray:
     return jnp.argmax(_head(cfg, params, hidden), axis=-1).astype(jnp.int32)
 
 
+@dataclasses.dataclass(frozen=True)
+class Sampling:
+    """On-device sampling spec for the paged steps.
+
+    ``temperature <= 0`` is exact greedy argmax — the zero-sync engine's
+    bit-identity bar — and is compiled out: the sampling branch only exists
+    in the jitted program when a positive temperature was configured at
+    engine build time. ``seed`` anchors the stream; the engine threads a
+    monotonically increasing per-dispatch ``nonce`` so every round (and
+    every split dispatch within a round) draws from a distinct fold of the
+    key while staying reproducible across serve/step, overlap on/off, and
+    meshes (every operand replicates, and the threefry key derivation is
+    device-count independent)."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def _sample_tokens(cfg: ModelConfig, params: Params, hidden,
+                   sampling: Optional[Sampling], nonce) -> jnp.ndarray:
+    """Fused LM-head + token selection on device: ``hidden`` [..., d] ->
+    int32 token ids [...]. Greedy (``sampling`` None or temperature <= 0)
+    lowers to exactly :func:`_greedy_sample`; otherwise temperature/top-k
+    categorical sampling with the RNG key folded from the traced ``nonce``
+    (independent Gumbel noise per row/position — multi-row and multi-position
+    batches sample each logit row independently)."""
+    if sampling is None or sampling.greedy or nonce is None:
+        return _greedy_sample(cfg, params, hidden)
+    logits = _head(cfg, params, hidden).astype(jnp.float32)
+    logits = logits / jnp.float32(sampling.temperature)
+    if 0 < sampling.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, sampling.top_k)[0][..., -1:]
+        logits = jnp.where(logits >= kth, logits,
+                           jnp.finfo(logits.dtype).min)
+    key = jax.random.fold_in(jax.random.PRNGKey(sampling.seed),
+                             jnp.asarray(nonce, jnp.uint32))
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
 def paged_chunk_step(cfg: ModelConfig, params: Params, tokens, cache, row_pos, *,
                      rctx: RunCtx, row_lens, block_tables, write_slots,
-                     logits_at):
+                     logits_at, sampling: Optional[Sampling] = None,
+                     nonce=None):
     """Fused ragged chunked-prefill step over the paged cache.
 
     One dispatch advances *every* prefill row in the decision: ``tokens``
     [R, L] holds each request's chunk (bucket-padded), ``row_pos`` [R] its
     cache offset, ``row_lens`` [R] its post-chunk valid length, ``logits_at``
     [R] the index of its last real token. Returns (token_ids [R] int32,
-    cache) — greedy sampling happens on device (see ``_greedy_sample``)."""
+    cache) — sampling happens on device (see ``_sample_tokens``)."""
     x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
                                  mode="paged_chunk", pos=row_pos, lengths=row_lens,
                                  paged=PagedView(block_tables, write_slots))
     sel = jnp.take_along_axis(
         x, jnp.asarray(logits_at).reshape(-1, 1, 1), axis=1)[:, 0]
-    return _greedy_sample(cfg, params, sel), new_cache
+    return _sample_tokens(cfg, params, sel, sampling, nonce), new_cache
 
 
 def paged_decode_step(cfg: ModelConfig, params: Params, tokens, cache, *,
-                      rctx: RunCtx, lengths, block_tables, write_slots):
+                      rctx: RunCtx, lengths, block_tables, write_slots,
+                      sampling: Optional[Sampling] = None, nonce=None):
     """One decode step for a ragged row batch over the paged cache (the
     paged_attention kernel on TPU, its jnp oracle elsewhere). ``lengths`` [R]
     counts each row's tokens *including* the one being written. Returns
-    (token_ids [R] int32, cache) — greedy sampling happens on device."""
+    (token_ids [R] int32, cache) — sampling happens on device."""
     x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
                                  mode="paged_decode", pos=0, lengths=lengths,
                                  paged=PagedView(block_tables, write_slots))
-    return _greedy_sample(cfg, params, x[:, -1]), new_cache
+    return _sample_tokens(cfg, params, x[:, -1], sampling, nonce), new_cache
+
+
+def paged_spec_step(cfg: ModelConfig, params: Params, tokens, cache, row_pos, *,
+                    rctx: RunCtx, row_lens, block_tables, write_slots,
+                    sampling: Optional[Sampling] = None, nonce=None):
+    """Speculative **verify** step: multi-token decode rows with on-device
+    accept/reject, executed through the same fused ragged paged-prefill path
+    as ``paged_chunk_step`` (Sq > 1 rows at arbitrary offsets).
+
+    ``tokens`` [R, S] holds each row's pending token followed by its draft
+    candidates (bucket-padded past ``n_i = row_lens_i - row_pos_i``);
+    ``row_pos`` [R] is the row's resident cache length (the first write
+    position), ``row_lens`` [R] = ``row_pos + n_i``. The model's output
+    ``out[:, j]`` is its next-token choice given the context through input
+    position ``j``; draft ``tokens[:, j+1]`` is accepted iff every earlier
+    draft matched, so the emitted stream ``out[:, :a+1]`` (``a`` accepted
+    drafts + one bonus token) is *exactly* the autoregressive sample/argmax
+    sequence — greedy tokens are bit-identical to plain decode at any k.
+
+    Returns ``(payload int32 [R * (S+1)], cache)``: per row
+    ``[accepted, out_0 .. out_{S-1}]`` raveled, so the engine's single
+    deferred readback per round carries accepted lengths and token ids
+    together and rolls back rejected tail positions host-side (their KV
+    writes landed in already-owned pages and are simply overwritten)."""
+    S = tokens.shape[1]
+    x, new_cache, _, _ = forward(cfg, params, tokens, rctx=rctx, cache=cache,
+                                 mode="paged_chunk", pos=row_pos, lengths=row_lens,
+                                 paged=PagedView(block_tables, write_slots))
+    out = _sample_tokens(cfg, params, x, sampling, nonce)        # [R, S]
+    n_real = (jnp.asarray(row_lens) - jnp.asarray(row_pos))[:, None]
+    jidx = jnp.arange(1, S)[None, :]
+    matches = (tokens[:, 1:] == out[:, :-1]) & (jidx < n_real)
+    accepted = jnp.cumprod(matches.astype(jnp.int32), axis=1).sum(axis=1)
+    payload = jnp.concatenate([accepted[:, None], out], axis=1)
+    return payload.reshape(-1).astype(jnp.int32), new_cache
 
 
 def build_model(cfg: ModelConfig, rctx: Optional[RunCtx] = None):

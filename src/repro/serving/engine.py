@@ -77,11 +77,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MAMBA, MLSTM, SLSTM, ModelConfig
 from repro.core.scheduler import KVPressure, SchedulerBase
-from repro.models.model import (PAGED_KV_LAYOUT, RunCtx, chunk_prefill_step,
-                                decode_step, init_cache, init_paged_cache,
-                                init_params, paged_chunk_step,
-                                paged_decode_step, supports_paged_cache)
+from repro.models.model import (PAGED_KV_LAYOUT, RunCtx, Sampling,
+                                chunk_prefill_step, decode_step, init_cache,
+                                init_paged_cache, init_params,
+                                paged_chunk_step, paged_decode_step,
+                                paged_spec_step, supports_paged_cache)
 from repro.serving.block_allocator import BlockAllocator
+from repro.serving.drafter import DrafterBase, NGramDrafter
 from repro.serving.request import ReqState, Request
 
 # chunk-length ladder for JIT shape bucketing; allocations above the top rung
@@ -165,6 +167,14 @@ class EngineStats:
     host_s: float = 0.0           # wall with NO round in flight: unhidden
                                   # host work + idle (the overlap target -> 0)
     reused_uploads: int = 0       # block-table uploads served from device cache
+    # ---- speculative decoding (paged mode, spec_k > 0) -----------------------
+    spec_calls: int = 0           # fused verify dispatches
+    spec_rounds: int = 0          # rounds that dispatched >=1 verify row
+    spec_rows: int = 0            # verify rows read back
+    spec_drafts: int = 0          # draft tokens proposed (verify width - 1)
+    spec_accepted: int = 0        # draft tokens the model accepted
+    spec_emitted: int = 0         # tokens emitted by verify rows (accepted
+                                  # drafts + bonus, after stop/length cuts)
     # ---- per-SLO-class breakdown (admission/eviction weight the class) ------
     finished_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
     evicted_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -175,13 +185,17 @@ class EngineStats:
 class _InflightRound:
     """One dispatched-but-not-read-back scheduler round (paged mode)."""
 
-    toks: List                    # device int32 [Rb] arrays, one per dispatch
+    toks: List                    # device int32 vectors, one per dispatch
     emits: List[Tuple[int, int]]  # (rid, row in the concatenated tok vector)
     t_dispatch: float             # perf_counter at dispatch
     executed_batch: List = dataclasses.field(default_factory=list)
     # (req, token index, was_first, was_finish): timestamps provisionally
     # stamped at dispatch, corrected to readback time at flush.
     stamped: List = dataclasses.field(default_factory=list)
+    # speculative verify rows: (rid, base offset of the row's [accepted,
+    # out_0..out_{Lb-1}] span in the concatenated vector, Lb, n_real, start).
+    spec_emits: List[Tuple[int, int, int, int, int]] = \
+        dataclasses.field(default_factory=list)
 
 
 class EngineCore:
@@ -219,6 +233,10 @@ class EngineCore:
                  page_size: int = 16, decode_reserve_tokens: int = 64,
                  overlap: bool = True, mesh=None, prefix_cache: bool = True,
                  defer_shared: bool = True,
+                 spec_k: int = 0, drafter: Optional[DrafterBase] = None,
+                 spec_class_caps: Optional[Dict[int, int]] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0,
                  rctx: Optional[RunCtx] = None, seed: int = 0):
         if cache_mode == "auto":
             cache_mode = "paged" if supports_paged_cache(cfg) else "slot"
@@ -261,6 +279,25 @@ class EngineCore:
                                   # "empty" | "no-decision" | "idle"
         self._inflight: Optional[_InflightRound] = None
 
+        # ---- speculative decoding + sampling policy --------------------------
+        # spec_k > 0 turns decode-eligible rows into multi-token verify rows
+        # (paged mode only; slot mode ignores it). Per-class caps bound the
+        # draft budget by SLO-class rank; interactive (rank 0) drops to plain
+        # decode under KV pressure — verify rows cost fixed compute for a
+        # variable token yield, exactly the trade a latency-critical class
+        # should not make when the system is already strained.
+        self.spec_k = int(spec_k) if cache_mode == "paged" else 0
+        self.drafter = drafter or (NGramDrafter() if self.spec_k else None)
+        self.spec_class_caps = dict(spec_class_caps or {})
+        self.sampling = (Sampling(temperature=temperature, top_k=top_k,
+                                  seed=sample_seed)
+                         if temperature > 0 else None)
+        self._sample_nonce = 0          # monotonic per-dispatch RNG fold
+        self._round_spec_rids: set = set()
+        self._spec_acc_mean = 0.0       # EMA of accepted length per verify row
+        self._spec_acc_m2 = 0.0         # EMA of its square (for the std)
+        self._spec_draft_ema = 0.0      # EMA of drafts per decode-eligible row
+
         self.prefix_cache = bool(prefix_cache) and cache_mode == "paged"
         # dependency-aware admission defer (in-flight burst sharing): when K
         # concurrent requests share an uncommitted prefix, followers wait for
@@ -291,23 +328,37 @@ class EngineCore:
                 # donation stays a same-layout buffer reuse.
                 jit_kw["out_shardings"] = (self._repl, self._cache_shardings)
             rctx_ = self.rctx
+            sampling = self.sampling
+            # ``nonce`` is a traced int32 scalar so changing it never
+            # retraces; with greedy sampling it is dead code and XLA drops it.
 
             def chunk_fused(params, tokens, cache, row_pos, row_lens, bt, ws,
-                            logits_at):
+                            logits_at, nonce):
                 return paged_chunk_step(cfg, params, tokens, cache, row_pos,
                                         rctx=rctx_, row_lens=row_lens,
                                         block_tables=bt, write_slots=ws,
-                                        logits_at=logits_at)
+                                        logits_at=logits_at,
+                                        sampling=sampling, nonce=nonce)
 
-            def decode_fused(params, tokens, cache, lengths, bt, ws):
+            def decode_fused(params, tokens, cache, lengths, bt, ws, nonce):
                 return paged_decode_step(cfg, params, tokens, cache,
                                          rctx=rctx_, lengths=lengths,
-                                         block_tables=bt, write_slots=ws)
+                                         block_tables=bt, write_slots=ws,
+                                         sampling=sampling, nonce=nonce)
+
+            def spec_fused(params, tokens, cache, row_pos, row_lens, bt, ws,
+                           nonce):
+                return paged_spec_step(cfg, params, tokens, cache, row_pos,
+                                       rctx=rctx_, row_lens=row_lens,
+                                       block_tables=bt, write_slots=ws,
+                                       sampling=sampling, nonce=nonce)
 
             self._jit_chunk_fused = jax.jit(chunk_fused, donate_argnums=(2,),
                                             **jit_kw)
             self._jit_decode_fused = jax.jit(decode_fused, donate_argnums=(2,),
                                              **jit_kw)
+            self._jit_spec_fused = jax.jit(spec_fused, donate_argnums=(2,),
+                                           **jit_kw)
         else:
             self._init_slot_mode(cfg, max_slots, max_len)
 
@@ -454,7 +505,8 @@ class EngineCore:
             # request with no row at all — needs no flush: its page writes
             # land before any later owner of the pages writes them.
             fr = self._inflight
-            if fr is not None and any(x == rid for x, _ in fr.emits):
+            if fr is not None and (any(x == rid for x, _ in fr.emits)
+                                   or any(s[0] == rid for s in fr.spec_emits)):
                 self._flush_round()
                 if r.state == ReqState.FINISHED:  # the flush finished it (stop)
                     return self._drain_events()
@@ -733,15 +785,24 @@ class EngineCore:
 
         executed_batch = []
         stamped = []
-        for r, n, ctx in executed:
+        for entry in executed:
+            r, n, ctx = entry[0], entry[1], entry[2]
+            drafts = entry[3] if len(entry) > 3 else 0
             if r.state in (ReqState.FINISHED, ReqState.ABORTED):
                 # finished by the flush inside execute (stop token): its row
                 # this round was dead — nothing to advance or emit.
                 continue
-            executed_batch.append((n, ctx))
+            # verify rows observe as (tokens, ctx, draft_tokens) triples so
+            # the predictor prices their extra per-row work (features x8).
+            executed_batch.append((n, ctx, drafts) if drafts else (n, ctx))
             emitted = False
             was_first = r.first_token_time is None
             if r.state == ReqState.DECODING:
+                if paged and r.rid in self._round_spec_rids:
+                    # speculative verify row: how many tokens it emits is
+                    # decided on device; emission, stop handling and page
+                    # rollback all happen at the flush, from the payload.
+                    continue
                 r.emit_token(t_now)
                 self.stats.decode_tokens += 1
                 emitted = True
@@ -958,15 +1019,19 @@ class EngineCore:
         tail = np.asarray(gen[folded:folded + upto - len(prompt)], np.int32)
         return np.concatenate([prompt, tail])
 
-    def _commit(self, rid: int) -> None:
+    def _commit(self, rid: int, upto: Optional[int] = None) -> None:
         """Freeze ``rid``'s fully-written pages into the content index (a
         no-op until the resident length crosses the next page boundary).
         Called only after the covering writes were dispatched: any future
         reader matches the pages in a *later* dispatch, so device-order
-        guarantees it sees the written content."""
+        guarantees it sees the written content. ``upto`` caps the freeze
+        below the resident length — speculative verify rows write k
+        unconfirmed draft positions that must never freeze (a rejected tail
+        is overwritten next round, and frozen pages may already be shared)."""
         if not self.prefix_cache or rid not in self.alloc.owners:
             return
-        upto = self._length.get(rid, 0)
+        if upto is None:
+            upto = self._length.get(rid, 0)
         if (upto // self.page_size > self.alloc.committed_count(rid)
                 and not self.alloc.commit_stalled(rid)):
             self.alloc.commit(rid, self._content_upto(rid, upto), upto)
@@ -982,6 +1047,84 @@ class EngineCore:
         if self.cache_mode == "paged":
             info.update(self.alloc.cache_stats())
         return info
+
+    # ---- speculative decoding plumbing --------------------------------------
+    def _transcript(self, rid: int) -> np.ndarray:
+        """Full visible token history (prompt incl. eviction folds + emitted
+        tail) — the drafter's lookup corpus. Host-visible only post-flush,
+        which is why speculative rounds flush before assembly."""
+        gen = self._tokens_out.get(rid, [])
+        tail = gen[self._folded.get(rid, 0):]
+        if not tail:
+            return self._prompts[rid]
+        return np.concatenate([self._prompts[rid],
+                               np.asarray(tail, np.int32)])
+
+    def _spec_pressure(self) -> bool:
+        """Should latency-critical classes stop speculating? Mirrors the
+        scheduler's budget-backoff signals: KV churn or near-full pool."""
+        if self._last_round_evictions > 0:
+            return True
+        backoff = getattr(self.sched, "kv_backoff_util", 0.92)
+        return self._kv_pressure().utilization > backoff
+
+    def _propose_drafts(self, r: Request,
+                        pressure: bool) -> Optional[np.ndarray]:
+        """Draft tokens for one decode-eligible row, after policy caps:
+        per-class ``spec_k`` budget, the request's remaining output budget
+        (drafting past max_output is wasted verify compute), and the
+        interactive-under-pressure opt-out. None -> plain decode row."""
+        k = self.spec_class_caps.get(r.class_rank(), self.spec_k)
+        k = min(k, self.spec_k, r.max_output - r.generated - 1)
+        if k <= 0 or (pressure and r.class_rank() == 0):
+            return None
+        drafts = self.drafter.propose(self._transcript(r.rid), k)
+        if drafts is None or len(drafts) == 0:
+            return None
+        return np.asarray(drafts[:k], np.int32)
+
+    def _note_spec_accept(self, a: int) -> None:
+        """EMA mean/second-moment of per-row accepted length; the std feeds
+        the scheduler's TBT-risk shrink (forwarder ``spec_len_std``)."""
+        beta = 0.9
+        if self.stats.spec_rows <= 1:
+            self._spec_acc_mean, self._spec_acc_m2 = float(a), float(a * a)
+        else:
+            self._spec_acc_mean = (beta * self._spec_acc_mean
+                                   + (1 - beta) * a)
+            self._spec_acc_m2 = beta * self._spec_acc_m2 + (1 - beta) * a * a
+
+    def _feed_spec_signals(self, round_drafts: int, round_rows: int) -> None:
+        """Publish speculation price signals to the scheduler's forwarder:
+        expected drafts riding each decode row (what ``to_batch`` prices)
+        and the accepted-length std (what the chunker treats as TBT risk)."""
+        if round_rows <= 0:
+            return
+        beta = 0.8
+        per_row = round_drafts / round_rows
+        self._spec_draft_ema = (per_row if self.stats.spec_rounds <= 1
+                                else beta * self._spec_draft_ema
+                                + (1 - beta) * per_row)
+        F = getattr(self.sched, "F", None)
+        if F is not None and hasattr(F, "spec_draft_tokens"):
+            F.spec_draft_tokens = self._spec_draft_ema
+            var = max(self._spec_acc_m2 - self._spec_acc_mean ** 2, 0.0)
+            F.spec_len_std = var ** 0.5
+
+    def spec_info(self) -> Dict:
+        """Speculation accounting (BENCH_goodput.json / CI smoke record)."""
+        st = self.stats
+        return {
+            "spec_k": self.spec_k,
+            "spec_rounds": st.spec_rounds,
+            "verify_rows": st.spec_rows,
+            "draft_tokens": st.spec_drafts,
+            "accepted_tokens": st.spec_accepted,
+            "acceptance_rate": st.spec_accepted / max(st.spec_drafts, 1),
+            "emitted_tokens": st.spec_emitted,
+            "tokens_per_verify_row": st.spec_emitted / max(st.spec_rows, 1),
+            "decode_tokens_per_round": st.decode_tokens / max(st.iterations, 1),
+        }
 
     def _evict(self, victim: Request) -> None:
         """Relegate ``victim`` (recompute-on-resume): drop its pages and fold
@@ -1078,9 +1221,12 @@ class EngineCore:
             toks = {idx: int(vals[idx]) for _, idx in fr.emits}
         else:
             # legacy profile: one scalar transfer per emitting row, like the
-            # pre-zero-sync engine's per-row ``int(jnp.argmax(logits[i]))``.
+            # pre-zero-sync engine's per-row ``int(jnp.argmax(logits[i]))``
+            # (verify-row spans transfer per row too in this mode).
             toks = {idx: int(self._readback(joined[idx]))
                     for _, idx in fr.emits}
+            if fr.spec_emits:
+                vals = self._readback(joined)
         self.stats.sync_s += time.perf_counter() - t0
         t_done = self._now()
         by_rid = {r.rid: (r, k, wf, fin) for r, k, wf, fin in fr.stamped}
@@ -1109,6 +1255,47 @@ class EngineCore:
                 self._done.append(r)
                 self._bump(self.stats.finished_by_class, r.slo_class)
                 self._event(EventKind.FINISHED, rid, t_done, reason="stop")
+        for rid, base, Lb, n_real, start in fr.spec_emits:
+            # payload span: [accepted, out_0 .. out_{Lb-1}]. The emitted
+            # stream is out_0..out_a (a accepted drafts + the bonus token) —
+            # exact autoregressive output, so greedy tokens are bit-identical
+            # to plain decode at any k. Rejected tail KV sits in positions
+            # start+m .. start+n_real-1 of already-owned pages; rolling the
+            # resident length back makes the next round overwrite it.
+            a = min(int(vals[base]), n_real - 1)
+            outs = [int(v) for v in vals[base + 1:base + 2 + a]]
+            r = self._reqs.get(rid)
+            self.stats.spec_rows += 1
+            self.stats.spec_drafts += n_real - 1
+            self._note_spec_accept(a)
+            if r is None or r.state in (ReqState.FINISHED, ReqState.ABORTED):
+                continue        # aborted between dispatch and flush
+            m = 0
+            finished_reason = ""
+            for tok in outs:
+                self._tokens_out.setdefault(rid, []).append(tok)
+                m += 1
+                r.emit_token(t_done)
+                self.stats.decode_tokens += 1
+                self._event(EventKind.TOKEN, rid, t_done, token=tok)
+                if r.state == ReqState.FINISHED:        # max_output reached
+                    finished_reason = "length"
+                    break
+                if r.hits_stop(tok):
+                    r.state = ReqState.FINISHED
+                    finished_reason = "stop"
+                    break
+            self.stats.spec_accepted += a
+            self.stats.spec_emitted += m
+            if rid in self._length:
+                self._length[rid] = start + m
+            if finished_reason:
+                r.finish_time = t_done
+                self._retire(r)
+                self._done.append(r)
+                self._bump(self.stats.finished_by_class, r.slo_class)
+                self._event(EventKind.FINISHED, rid, t_done,
+                            reason=finished_reason)
         latency = time.perf_counter() - fr.t_dispatch
         # dispatch->flush intervals are disjoint (the next dispatch happens
         # only after this flush), so their sum is the wall time covered by an
@@ -1226,9 +1413,56 @@ class EngineCore:
                 "tokens": tokens, "lengths": lengths, "tables": tables,
                 "slots": slots, "Rb": Rb, "nb": nb}
 
+    def _assemble_spec(self, batch: List[Tuple[Request, np.ndarray]]) -> dict:
+        """Numpy assembly of one fused speculative-verify dispatch: each row
+        is [pending token, draft_1..draft_k] at the request's resident
+        offset, executed through the ragged paged-prefill step. Runs *after*
+        the flush (unlike plain decode assembly) because the pending token
+        and the write positions depend on the previous round's accepted
+        counts. The resident length is advanced optimistically over the
+        whole row and rolled back to ``start + emitted`` at the flush."""
+        R = len(batch)
+        Rb = _row_bucket(R)
+        max_n = max(1 + len(d) for _, d in batch)
+        # verify rows are narrow (k+1 tokens); the chunk ladder's 16-wide
+        # floor would waste 4x the verify compute, so they get their own
+        # power-of-two width starting at 2.
+        Lb = _pow2(max_n, lo=2)
+        pts = [self.alloc.page_table(r.rid) for r, _ in batch]
+        # full reserved page table, like decode rows: stable bytes round over
+        # round so the device table-upload cache hits.
+        nb = _pow2(max(len(pt) for pt in pts))
+        tokens = np.zeros((Rb, Lb), np.int32)
+        row_pos = np.zeros((Rb,), np.int32)
+        row_lens = np.zeros((Rb,), np.int32)
+        tables = np.zeros((Rb, nb), np.int32)
+        slots = np.full((Rb, Lb), self._trash_slot, np.int64)
+        rows: List[Tuple[int, int, int]] = []   # (rid, n_real, start)
+        for i, ((r, drafts), pt) in enumerate(zip(batch, pts)):
+            rid = r.rid
+            start = self._length[rid]
+            n = 1 + len(drafts)
+            tokens[i, 0] = self._tokens_out[rid][-1]
+            tokens[i, 1:n] = drafts
+            if n < Lb:
+                tokens[i, n:] = tokens[i, n - 1]   # pad; writes hit trash
+            row_pos[i] = start
+            row_lens[i] = start + n
+            tables[i, :len(pt)] = pt
+            slots[i, :n] = self._page_slots(rid, np.arange(start, start + n))
+            self._length[rid] = start + n
+            rows.append((rid, n, start))
+        return {"kind": "spec", "tokens": tokens, "row_pos": row_pos,
+                "row_lens": row_lens, "tables": tables, "slots": slots,
+                "rows": rows, "Rb": Rb, "Lb": Lb, "nb": nb}
+
     def _dispatch(self, asm: dict):
         """Issue one fused dispatch (async under JAX dispatch); returns the
-        device token-id vector [Rb]."""
+        device token-id vector — [Rb] for decode/chunk, [Rb*(Lb+1)] payload
+        for spec. The RNG nonce advances per dispatch so sampled rounds stay
+        reproducible (the sequence of dispatches is deterministic)."""
+        nonce = self._to_dev(np.int32(self._sample_nonce))
+        self._sample_nonce += 1
         if asm["kind"] == "decode":
             self._note_shape(("decode", asm["Rb"], asm["nb"]))
             toks, self.cache = self._jit_decode_fused(
@@ -1236,8 +1470,18 @@ class EngineCore:
                 self._to_dev(asm["lengths"]),
                 self._upload_cached(("decode", asm.get("group", 0)),
                                     asm["tables"]),
-                self._to_dev(asm["slots"].astype(np.int32)))
+                self._to_dev(asm["slots"].astype(np.int32)), nonce)
             self.stats.decode_calls += 1
+        elif asm["kind"] == "spec":
+            self._note_shape(("spec", asm["Rb"], asm["Lb"], asm["nb"]))
+            toks, self.cache = self._jit_spec_fused(
+                self.params, self._to_dev(asm["tokens"]), self.cache,
+                self._to_dev(asm["row_pos"]), self._to_dev(asm["row_lens"]),
+                self._upload_cached(("spec", asm.get("group", 0)),
+                                    asm["tables"]),
+                self._to_dev(asm["slots"].reshape(-1).astype(np.int32)),
+                nonce)
+            self.stats.spec_calls += 1
         else:
             self._note_shape(("chunk", asm["Rb"], asm["Lb"], asm["nb"]))
             toks, self.cache = self._jit_chunk_fused(
@@ -1246,7 +1490,7 @@ class EngineCore:
                 self._upload_cached(("chunk", asm.get("group", 0)),
                                     asm["tables"]),
                 self._to_dev(asm["slots"].reshape(-1).astype(np.int32)),
-                self._to_dev(asm["logits_at"]))
+                self._to_dev(asm["logits_at"]), nonce)
             self.stats.prefill_calls += 1
         self._round_calls += 1
         return toks
@@ -1342,25 +1586,44 @@ class EngineCore:
                     executed.append((r, n_exec, ctx))
         return executed
 
-    def _execute_paged(self, decision) -> List[Tuple[Request, int, int]]:
+    def _execute_paged(self, decision) -> List[Tuple]:
         """Grow allocations (evicting under pressure), assemble the round on
         the host while the previous round still runs on device, sync once on
-        the previous round's token ids, then dispatch the decision as one
-        fused decode + one fused ragged prefill (both async)."""
+        the previous round's token ids, then dispatch the decision as fused
+        decode + speculative-verify + ragged prefill batches (all async).
+
+        With ``spec_k > 0`` the round's one readback moves *before* assembly
+        instead of after: round N's accepted counts decide round N+1's write
+        positions (host-side rollback) and drafting needs the newest emitted
+        token host-visible. Still exactly one readback per round — only the
+        host assembly loses its overlap with the device. At ``spec_k == 0``
+        the original assemble-then-flush order is untouched."""
         prompts = self._prompts
         protected = {r.rid for r, _ in decision.alloc}
         ev0 = self.alloc.evictions
+        spec_on = self.spec_k > 0 and self.drafter is not None
+        if spec_on:
+            self._flush_round()
+        self._round_spec_rids = set()
 
         def is_live(r):  # an earlier grow may have evicted a later entry
-            return r.rid in self.alloc.owners
+            return r.rid in self.alloc.owners and r.state not in (
+                ReqState.FINISHED, ReqState.ABORTED)
 
+        pressure = self._spec_pressure() if spec_on else False
         decode_rows: List[Request] = []
+        spec_rows: List[Tuple[Request, np.ndarray]] = []
         prefill_rows: List[Tuple[Request, int]] = []
         for r, n in decision.alloc:
             if not is_live(r):
                 continue
             if r.state == ReqState.DECODING:
-                if self._grow_or_evict(r, self._length[r.rid] + 1, protected):
+                drafts = self._propose_drafts(r, pressure) if spec_on else None
+                if drafts is not None and self._grow_or_evict(
+                        r, self._length[r.rid] + 1 + len(drafts), protected):
+                    spec_rows.append((r, drafts))
+                elif self._grow_or_evict(r, self._length[r.rid] + 1,
+                                         protected):
                     decode_rows.append(r)
             else:
                 n_exec = min(n, r.remaining_prefill())
@@ -1374,13 +1637,14 @@ class EngineCore:
                     continue
                 prefill_rows.append((r, n_exec))
         decode_rows = [r for r in decode_rows if is_live(r)]
+        spec_rows = [(r, d) for r, d in spec_rows if is_live(r)]
         prefill_rows = [(r, n) for r, n in prefill_rows if is_live(r)]
         self._last_round_evictions = self.alloc.evictions - ev0
-        if not decode_rows and not prefill_rows:
+        if not decode_rows and not spec_rows and not prefill_rows:
             return []
 
         # ---- host-side numpy assembly (device still busy with round N) ------
-        executed: List[Tuple[Request, int, int]] = []
+        executed: List[Tuple] = []
         decode_asms: List[dict] = []
         if decode_rows:
             ctxs = {r.rid: r.context_len() for r in decode_rows}
@@ -1389,6 +1653,21 @@ class EngineCore:
                 asm["group"] = i // ROW_BUCKETS[-1]
                 decode_asms.append(asm)
             executed += [(r, 1, ctxs[r.rid]) for r in decode_rows]
+        spec_asms: List[dict] = []
+        if spec_rows:
+            self.stats.spec_rounds += 1
+            for i in range(0, len(spec_rows), ROW_BUCKETS[-1]):
+                asm = self._assemble_spec(spec_rows[i:i + ROW_BUCKETS[-1]])
+                asm["group"] = i // ROW_BUCKETS[-1]
+                spec_asms.append(asm)
+            for r, drafts in spec_rows:
+                self._round_spec_rids.add(r.rid)
+                executed.append((r, 1 + len(drafts), r.context_len(),
+                                 len(drafts)))
+        if spec_on:
+            self._feed_spec_signals(
+                sum(len(d) for _, d in spec_rows),
+                len(decode_rows) + len(spec_rows))
         chunk_asms: List[dict] = []
         if prefill_rows:
             ctxs = {r.rid: r.context_len() for r, _ in prefill_rows}
@@ -1399,11 +1678,12 @@ class EngineCore:
                 self._commit(r.rid)   # freeze pages this round fills
 
         # ---- the round's single sync: round N's token ids -------------------
+        # (no-op when spec_on already flushed above — never a second sync)
         self._flush_round()
 
         # ---- dispatch round N+1 (async) -------------------------------------
         t_disp = time.perf_counter()
-        toks, emits, off = [], [], 0
+        toks, emits, spec_emits, off = [], [], [], 0
         for asm in decode_asms:
             # decode inputs are round N's outputs — only now host-visible
             for i, rid in enumerate(asm["rids"]):
@@ -1425,6 +1705,16 @@ class EngineCore:
                 self._commit(rid)
             toks.append(self._dispatch(asm))
             off += asm["Rb"]
+        for asm in spec_asms:
+            toks.append(self._dispatch(asm))
+            W = asm["Lb"] + 1
+            for i, (rid, n_real, start) in enumerate(asm["rows"]):
+                spec_emits.append((rid, off + i * W, asm["Lb"], n_real,
+                                   start))
+                # only the pending token's position (start) is confirmed
+                # content — draft positions must not freeze until accepted.
+                self._commit(rid, upto=start + 1)
+            off += asm["Rb"] * W
         for asm in chunk_asms:
             toks.append(self._dispatch(asm))
             emits += [(rid, off + row) for rid, row in asm["emit_rows"]
@@ -1432,7 +1722,8 @@ class EngineCore:
             off += asm["Rb"]
         self.stats.dispatch_s += time.perf_counter() - t_disp
         self._inflight = _InflightRound(toks=toks, emits=emits,
-                                        t_dispatch=t_disp)
+                                        t_dispatch=t_disp,
+                                        spec_emits=spec_emits)
         return executed
 
 

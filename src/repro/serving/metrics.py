@@ -24,8 +24,16 @@ def summarize(requests: Sequence[Request], duration: float) -> Dict:
     viol = [r.violations() for r in requests]
     ttft = [r.first_token_time - r.arrival for r in done]
     e2e = [r.finish_time - r.arrival for r in requests if r.finish_time is not None]
+    # Dimensionless TTFT slowdown: measured TTFT over the request's
+    # exclusive-service prefill time. Only requests whose generator stamped
+    # a real baseline participate — ``exclusive_ttft`` defaults to 0.0, and
+    # dividing by the old 1e-9 guard inflated the percentile to ~1e9 for
+    # every workload that never set it. Exclusive service is a lower bound
+    # on TTFT, so the ratio is clamped at 1.0 (timer jitter can measure a
+    # hair under it).
     ttft_slowdown = [
-        (r.first_token_time - r.arrival) / max(r.exclusive_ttft, 1e-9) for r in done
+        max((r.first_token_time - r.arrival) / r.exclusive_ttft, 1.0)
+        for r in done if r.exclusive_ttft > 0.0
     ]
     n = max(len(requests), 1)
     ok = sum(1 - v["violated"] for v in viol)

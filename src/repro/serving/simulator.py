@@ -4,8 +4,10 @@ Executes a scheduler against the analytic ground-truth cost model: each round
 the scheduler emits a request-level token allocation; the simulator charges
 the batch's (noisy) latency, advances request state — chunked prefill
 progress, first-token emission when prefill completes, one token per decode
-request — enforces paged-KV admission/preemption, and feeds the observed
-latency back to the scheduler's online predictor. Wall-clock in the simulated
+request (or ``1 + accepted`` with speculative decoding on: verify rows are
+priced at ``1 + spec_k`` tokens and serve a sampled accepted chain) —
+enforces paged-KV admission/preemption, and feeds the observed latency back
+to the scheduler's online predictor. Wall-clock in the simulated
 timeline is exact; the Python loop itself is cheap.
 """
 from __future__ import annotations
@@ -36,7 +38,10 @@ class ServingSimulator:
                  decode_reserve_tokens: int = 64,
                  max_sim_time: float = 1e9,
                  warmup_predictor: bool = True,
-                 collect_trace: bool = False):
+                 collect_trace: bool = False,
+                 spec_k: int = 0,
+                 spec_acceptance: float = 0.0,
+                 spec_seed: int = 0):
         self.sched = scheduler
         self.cost = cost_model
         self.workload = sorted(workload, key=lambda r: r.arrival)
@@ -45,6 +50,18 @@ class ServingSimulator:
         self.max_sim_time = max_sim_time
         self.collect_trace = collect_trace
         self._last_round_evictions = 0
+        # speculative decoding: each decode row is priced as a (1 + spec_k)-
+        # token verify row (the drafted tokens ride the dispatch whether or
+        # not they are accepted) and serves 1 + a tokens, a drawn as a chain
+        # of per-draft accepts at ``spec_acceptance`` — the engine-measured
+        # rate (see bench_goodput --spec-k, which feeds it in)
+        self.spec_k = int(spec_k)
+        self.spec_acceptance = float(spec_acceptance)
+        self.spec_rows = 0
+        self.spec_emitted = 0
+        if self.spec_k:
+            import numpy as np
+            self._spec_rng = np.random.default_rng(spec_seed)
         if warmup_predictor:
             self._offline_calibration()
 
@@ -116,6 +133,10 @@ class ServingSimulator:
                 break
 
             batch = decision.batch()
+            if self.spec_k:
+                batch = [(n + (self.spec_k if r.state == ReqState.DECODING
+                               else 0), r.context_len())
+                         for r, n in decision.alloc]
             latency = self.cost.latency(batch, noisy=True)
             t += latency
             iterations += 1
@@ -129,11 +150,22 @@ class ServingSimulator:
                 if req.rid not in self.alloc.owners:
                     continue   # evicted by an earlier entry's growth this round
                 if req.state == ReqState.DECODING:
-                    if not self.alloc.grow(req.rid, req.context_len() + 1):
-                        self._evict_for(req, active, waiting)
+                    serve = 1
+                    if self.spec_k:
+                        while (serve <= self.spec_k and self._spec_rng.random()
+                               < self.spec_acceptance):
+                            serve += 1
+                        self.spec_rows += 1
+                        self.spec_emitted += serve
+                    for _ in range(serve):
+                        if req.state != ReqState.DECODING:
+                            break   # accepted tail past max_output: dropped
                         if not self.alloc.grow(req.rid, req.context_len() + 1):
-                            continue   # capacity exhausted: token not served
-                    req.emit_token(t)
+                            self._evict_for(req, active, waiting)
+                            if not self.alloc.grow(req.rid,
+                                                   req.context_len() + 1):
+                                break   # capacity exhausted: token not served
+                        req.emit_token(t)
                 else:
                     self.alloc.grow(req.rid, req.prefilled + n)
                     req.advance_prefill(n)

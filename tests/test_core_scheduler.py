@@ -47,9 +47,29 @@ def test_features_hand_case():
     assert x[4] == 300                       # x5 = decode context
     assert x[5] == 40                        # x6 = prefill tokens
     assert x[6] == 32                        # x7 = max chunk
+    assert x[7] == 0                         # x8 = 0 without speculation
     assert scene_of(batch) == "mixed"
     assert scene_of([(1, 5)]) == "pure_decode"
     assert scene_of([(5, 0)]) == "pure_prefill"
+
+
+def test_features_speculative_rows():
+    # a verify row (1 pending + 3 drafts over 100 cached) is decode work:
+    # it stays in D (x4/x5) and its extra cost lands in x8, not x1/x6.
+    batch = [(4, 100, 3), (1, 200), (8, 50)]
+    x = batch_features(batch)
+    assert x[3] == 2                         # verify row counts as decode
+    assert x[4] == 300
+    assert x[0] == 8 * 58                    # prefill features see no drafts
+    assert x[5] == 8
+    assert x[7] == 3 * 104                   # (c-1) * (u+c) for the verify row
+    assert scene_of([(4, 100, 3)]) == "pure_decode"
+    # vectorized path agrees, including on mixed-width batches
+    from repro.core.features import features_many
+    X, scenes, csum = features_many([batch, [(1, 10)]])
+    assert np.allclose(X[0], x)
+    assert scenes[0] == "mixed" and scenes[1] == "pure_decode"
+    assert csum[0] == 13 and csum[1] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -57,7 +77,7 @@ def test_features_hand_case():
 # ---------------------------------------------------------------------------
 def _linear_truth(batch):
     x = batch_features(batch)
-    w = np.array([1e-9, 2e-9, 3e-8, 1e-4, 5e-9, 2e-6, 1e-7])
+    w = np.array([1e-9, 2e-9, 3e-8, 1e-4, 5e-9, 2e-6, 1e-7, 4e-9])
     return float(x @ w + 5e-3)
 
 

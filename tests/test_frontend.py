@@ -311,6 +311,65 @@ def test_http_cancel_mid_stream_reclaims_pages(cfg, http_fe):
     assert core.stats.aborted == 1
 
 
+@pytest.fixture()
+def http_fe_spec(cfg):
+    """Front door over a speculating engine whose drafter replays the known
+    greedy stream — every draft is accepted, so each decode round emits a
+    full multi-token burst (deterministic coverage for batched SSE frames)."""
+    from repro.serving.drafter import DrafterBase
+
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    ref_srv = _server(cfg)
+    ref = ref_srv.submit(prompt.copy(), max_output=8).result(900.0)
+
+    class ReplayDrafter(DrafterBase):
+        def propose(self, context, k):
+            gen = len(context) - len(prompt)
+            if gen < 0 or gen >= len(ref):
+                return None
+            out = np.asarray(ref[gen:gen + k], np.int32)
+            return out if len(out) else None
+
+    backend = build_backend(replicas=1, kv_tokens=2048, max_budget=256,
+                            spec_k=4, drafter=ReplayDrafter())
+    fe = HttpFrontend(backend, port=0, drain_s=30.0)
+    th = threading.Thread(target=lambda: asyncio.run(fe.serve_forever()),
+                          daemon=True)
+    th.start()
+    cli = EngineHttpClient(port=0, timeout=300.0)
+    t_end = time.perf_counter() + 60.0
+    while fe.port == 0 and time.perf_counter() < t_end:
+        time.sleep(0.02)
+    cli.port = fe.port
+    cli.wait_ready(60.0)
+    yield cli, backend, prompt, ref
+    fe.request_stop()
+    th.join(timeout=60.0)
+    assert not th.is_alive(), "HTTP server failed to drain on stop"
+
+
+def test_http_sse_batches_speculative_bursts(cfg, http_fe_spec):
+    """A speculative round's burst arrives as ONE SSE `token` frame carrying
+    `tokens: [ids]`, the stream equals the unspeculated reference, and the
+    legacy single-`token` field still carries the frame's first id."""
+    cli, backend, prompt, ref = http_fe_spec
+    h = cli.generate(prompt.tolist(), max_output=8)
+    got = h.result()
+    assert got == ref, "speculative SSE stream diverged from greedy"
+    frames = [d for name, d in h.events if name == "token"]
+    assert frames, "no token frames seen"
+    assert all("tokens" in d and d["token"] == d["tokens"][0] for d in frames)
+    assert any(len(d["tokens"]) > 1 for d in frames), \
+        "full-acceptance speculation never batched an SSE frame"
+    # terminal frame counts every token of every burst
+    fin = next(d for name, d in h.events if name == "finished")
+    assert fin["n_tokens"] == len(ref)
+    st = cli.stats()["engine"]
+    assert st["spec_accepted"] > 0
+    assert st["token_readbacks"] == st["iterations"]
+
+
 def test_http_stats_and_draining_rejection(cfg, http_fe):
     fe, cli, backend = http_fe
     rng = np.random.default_rng(5)

@@ -211,6 +211,25 @@ def test_paged_attention_fused(case, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("depth", [3, 4])
+@pytest.mark.parametrize("case", FUSED_PA_CASES[:3])
+def test_paged_attention_fused_dma_depth_parity(case, depth):
+    """Deeper DMA rings only change the copy schedule: depth-N output must
+    be bit-identical to the default double buffer."""
+    B, Hkv, G, D, ps, P, n, window, cap = case
+    H = Hkv * G
+    q = jnp.asarray(RNG.normal(size=(B, H, D)), jnp.float32)
+    _, _, kvp = _fused_pool(Hkv, P, ps, D, jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (B, n)), jnp.int32)
+    lengths = _edge_lengths(B, n, ps)
+    base = paged_attention_fused(q, kvp, bt, lengths, scale=D ** -0.5,
+                                 window=window, softcap=cap, interpret=True)
+    deep = paged_attention_fused(q, kvp, bt, lengths, scale=D ** -0.5,
+                                 window=window, softcap=cap,
+                                 dma_depth=depth, interpret=True)
+    assert np.array_equal(np.asarray(base), np.asarray(deep))
+
+
 @pytest.mark.parametrize("case", FUSED_PA_CASES)
 def test_paged_attention_partial_recombines_bit_exact(case):
     """finalize(partial kernel over the full page range) must equal the full
@@ -315,6 +334,28 @@ def test_paged_prefill_attention_fused(case, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32)[valid],
                                np.asarray(ref, np.float32)[valid],
                                **_tol(dtype))
+
+
+@pytest.mark.parametrize("depth", [4])
+@pytest.mark.parametrize("case", FUSED_PPA_CASES[:3] + FUSED_PPA_CASES[3:4])
+def test_paged_prefill_fused_dma_depth_parity(case, depth):
+    """Ring depth must not change prefill output bits either — including the
+    windowed case, whose loop starts at a dynamic ``j_lo``."""
+    R, Sq, Hkv, G, D, ps, P, n, window, cap, bq = case
+    q = jnp.asarray(RNG.normal(size=(R, Sq, Hkv, G, D)), jnp.float32)
+    _, _, kvp = _fused_pool(Hkv, P, ps, D, jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, P, (R, n)), jnp.int32)
+    pos, lens = _prefill_edges(R, Sq, n, ps)
+    pos, lens = jnp.asarray(pos), jnp.asarray(lens)
+    base = paged_prefill_attention_fused(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap,
+        block_q=bq, interpret=True)
+    deep = paged_prefill_attention_fused(
+        q, kvp, bt, pos, lens, scale=D ** -0.5, window=window, softcap=cap,
+        block_q=bq, dma_depth=depth, interpret=True)
+    q_pos = np.asarray(pos)[:, None] + np.arange(Sq)[None, :]
+    valid = q_pos < np.asarray(lens)[:, None]
+    assert np.array_equal(np.asarray(base)[valid], np.asarray(deep)[valid])
 
 
 @pytest.mark.parametrize("case", FUSED_PPA_CASES[:3])

@@ -162,3 +162,49 @@ def test_metrics_and_goodput_search():
         return {"violation_rate": 0.0 if qps <= 3.3 else 0.5, "goodput_rps": qps}
     out = max_goodput(fake_run, 0.5, 8.0, iters=10)
     assert abs(out["qps"] - 3.3) < 0.1
+
+
+def test_simulator_speculative_decode_conserves_and_saves_rounds():
+    """spec_k > 0 prices decode rows as (1+k)-token verify rows and serves
+    sampled accepted chains: every request must still finish with exactly
+    max_output monotone tokens, KV must drain, and multi-token rounds must
+    reduce the round count vs one-token decode on the same workload."""
+    def sim_for(**kw):
+        cm = CostModel(PROF, HW, seed=5)
+        wl = make_workload(WorkloadSpec("sharegpt", qps=2.0, duration=30,
+                                        seed=5), cm)
+        sched = SlidingServeScheduler(max_budget=4096)
+        return ServingSimulator(sched, cm, wl,
+                                kv_capacity_tokens=256 * 1024, **kw)
+
+    sim = sim_for(spec_k=4, spec_acceptance=0.5)
+    res = sim.run()
+    for r in res.requests:
+        assert r.generated == r.max_output
+        assert len(r.token_times) == r.max_output
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+    assert sim.alloc.free_blocks == sim.alloc.num_blocks
+    assert sim.spec_rows > 0 and sim.spec_emitted > sim.spec_rows
+    base = sim_for().run()
+    assert res.iterations < base.iterations
+    """Regression: ttft_slowdown once divided by a 1e-9 guard instead of the
+    stamped exclusive-service baseline, reporting ~1e9 for every bench
+    scenario. It is measured-TTFT / exclusive-prefill-time: >= 1 by
+    construction (exclusive service lower-bounds TTFT) and small for a
+    workload the scheduler actually keeps up with."""
+    cm = CostModel(PROF, HW, seed=5)
+    wl = make_workload(WorkloadSpec("sharegpt", qps=2.0, duration=30, seed=5),
+                       cm)
+    assert all(r.exclusive_ttft > 0.0 for r in wl), \
+        "make_workload must stamp the exclusive-service baseline"
+    sched = SlidingServeScheduler(max_budget=4096)
+    sim = ServingSimulator(sched, cm, wl, kv_capacity_tokens=256 * 1024)
+    res = sim.run()
+    s = summarize(res.requests, res.duration)
+    for key in ("ttft_slowdown_p50", "ttft_slowdown_p99"):
+        assert 1.0 <= s[key] < 1e4, (key, s[key])
+    # requests without a stamped baseline are excluded, not divided by 1e-9
+    for r in res.requests:
+        r.exclusive_ttft = 0.0
+    s0 = summarize(res.requests, res.duration)
+    assert math.isnan(s0["ttft_slowdown_p50"])

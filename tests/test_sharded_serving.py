@@ -30,7 +30,7 @@ from repro.launch.mesh import make_serving_mesh
 from repro.serving.engine import EngineCore
 from repro.serving.server import InferenceServer
 
-def run(mesh_spec, cfg):
+def run(mesh_spec, cfg, prompts=None, **engine_kw):
     mesh = make_serving_mesh(mesh_spec)
     # the small decode reserve makes the tiny prompt's block table narrower
     # than the mesh axis (nb < m), forcing the sequence-sharded fallback's
@@ -38,15 +38,17 @@ def run(mesh_spec, cfg):
     core = EngineCore(cfg, SlidingServeScheduler(max_budget=256,
                                                  max_iter_time=5.0),
                       cache_mode="paged", kv_capacity_tokens=2048,
-                      decode_reserve_tokens=8, mesh=mesh)
+                      decode_reserve_tokens=8, mesh=mesh, **engine_kw)
     server = InferenceServer(core)
     rng = np.random.default_rng(0)
     hs = []
-    for n, cls_ in [(37, "interactive"), (64, "batch"), (18, "standard"),
-                    (5, "interactive")]:
-        hs.append(server.submit(
-            rng.integers(1, core.cfg.vocab_size, n).astype(np.int32),
-            slo_class=cls_, max_output=5))
+    if prompts is None:
+        prompts = [(rng.integers(1, core.cfg.vocab_size, n).astype(np.int32),
+                    cls_)
+                   for n, cls_ in [(37, "interactive"), (64, "batch"),
+                                   (18, "standard"), (5, "interactive")]]
+    for p, cls_ in prompts:
+        hs.append(server.submit(p.copy(), slo_class=cls_, max_output=5))
     server.run(max_wall_s=200.0)
     st = core.stats
     # the zero-sync invariant survives jit(shard_map): one readback per round
@@ -77,6 +79,35 @@ for spec in ("2x4", "1x8"):
     assert info["kv_partition"] == "heads", info
     assert info["kv_shards"] == int(spec.split("x")[1]), info
     assert got == base8, (spec, got, base8)
+
+# ---- speculative decoding across the mesh ------------------------------------
+# periodic prompts give the n-gram drafter matches; greedy tokens must be
+# bit-identical to the unspeculated single-device stream at any spec_k on
+# every mesh, with the one-readback invariant intact (asserted inside run).
+rng = np.random.default_rng(0)
+loopy = []
+for cls_ in ("interactive", "batch", "standard", "interactive"):
+    seg = rng.integers(1, cfg.vocab_size, 12)
+    loopy.append((np.tile(seg, 3).astype(np.int32), cls_))
+spec_base, _ = run(None, cfg, prompts=loopy)
+got, core = run(None, cfg, prompts=loopy, spec_k=4)
+assert got == spec_base, "speculation changed single-device greedy tokens"
+assert core.stats.spec_rounds > 0, "speculation never engaged"
+for spec in ("2x4", "1x8"):
+    got, core = run(spec, cfg, prompts=loopy, spec_k=4)
+    assert core.stats.spec_rounds > 0, (spec, "speculation never engaged")
+    assert got == spec_base, (spec, got, spec_base)
+
+# ---- non-greedy sampling across the mesh -------------------------------------
+# temperature/top-k with a fixed seed: the per-dispatch nonce sequence is
+# deterministic, so the sampled stream must agree across meshes too (same
+# empirical exactness caveat as the greedy sequence-sharded case above).
+samp_kw = dict(temperature=0.7, top_k=20, sample_seed=11)
+samp_base, _ = run(None, cfg, **samp_kw)
+assert samp_base != base, "sampling reproduced greedy — nonce plumbing dead?"
+for spec in ("2x4", "1x8"):
+    got, _ = run(spec, cfg, **samp_kw)
+    assert got == samp_base, (spec, got, samp_base)
 
 # ---- ops-level parity vs the jnp oracles, under jit --------------------------
 # covers what engine workloads may not reach: active sliding windows, logit
